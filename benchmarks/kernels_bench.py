@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks: the conversion hot spots.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+harness, not speed), so the numbers that matter here are (a) the jnp
+reference path wall time — the real CPU compute the Figure-2 calibration
+uses — and (b) derived per-tile conversion arithmetic (MPix/s, tiles/s).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.ops import dct8x8_quant, downsample2x2, rgb2ycbcr
+from repro.wsi.jpeg import encode_tile
+from repro.wsi.slide import SyntheticScanner, PSVReader
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # warm/compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def main():
+    rng = np.random.default_rng(0)
+    tile = jnp.asarray(rng.integers(0, 255, size=(3, 256, 256)), jnp.float32)
+    plane = jnp.asarray(rng.normal(0, 40, size=(256, 256)), jnp.float32)
+    q = jnp.asarray(ref.JPEG_LUMA_Q)
+    rows = []
+    jit_ref = lambda f: jax.jit(f)
+    rows.append(("rgb2ycbcr_ref_256", _time(jit_ref(ref.rgb2ycbcr_ref), tile),
+                 "3x256x256"))
+    rows.append(("downsample_ref_256", _time(jit_ref(ref.downsample2x2_ref),
+                                             tile), "3x256x256"))
+    rows.append(("dct_quant_ref_256",
+                 _time(jit_ref(lambda p: ref.dct8x8_quant_ref(p, q)), plane),
+                 "256x256"))
+    rows.append(("rgb2ycbcr_pallas_interp",
+                 _time(lambda x: rgb2ycbcr(x), tile), "interpret-mode"))
+    rows.append(("dct_quant_pallas_interp",
+                 _time(lambda p: dct8x8_quant(p, q), plane), "interpret-mode"))
+
+    # fused rwkv6 wkv chunk kernel vs unfused chunked XLA path
+    from repro.kernels.wkv_chunk import wkv_chunk_pallas
+    from repro.models.rwkv6 import wkv_chunked
+    B, S, H, K = 1, 256, 2, 64
+    rr, kk, vv = (jnp.asarray(rng.normal(size=(B, S, H, K)), jnp.float32)
+                  for _ in range(3))
+    lw = -jnp.asarray(rng.uniform(0.01, 2.0, (B, S, H, K)), jnp.float32)
+    uu = jnp.asarray(rng.normal(size=(H, K)), jnp.float32)
+    st0 = jnp.zeros((B, H, K, K), jnp.float32)
+    rows.append(("wkv_chunked_xla",
+                 _time(jax.jit(lambda *a: wkv_chunked(*a)[0]),
+                       rr, kk, vv, lw, uu, st0), f"B{B} S{S} H{H}"))
+    rows.append(("wkv_chunk_pallas_interp",
+                 _time(lambda *a: wkv_chunk_pallas(*a), rr, kk, vv, lw, uu),
+                 "interpret-mode"))
+
+    # end-to-end tile encode (transform + host entropy coder)
+    psv = SyntheticScanner(seed=0).scan(256, 256, 256)
+    t = PSVReader(psv).read_tile(0, 0)
+    encode_tile(t)  # warm
+    t0 = time.perf_counter()
+    n = 4
+    for _ in range(n):
+        jpg = encode_tile(t)
+    dt = (time.perf_counter() - t0) / n
+    rows.append(("jpeg_encode_tile_256", dt * 1e6,
+                 f"{0.256*0.256/dt:.2f}MPix/s ratio={len(jpg)/t.nbytes:.3f}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

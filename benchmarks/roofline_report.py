@@ -1,0 +1,74 @@
+"""Render the §Roofline table from the dry-run artifacts.
+
+Reads every ``artifacts/dryrun/*.json`` cell, emits CSV + a markdown table
+(written to ``artifacts/roofline.md``), flags HBM violations, and prints the
+three hillclimb candidates (worst mfu-bound, most collective-bound, and the
+paper-representative serving cell).
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(str(ART / "dryrun" / f"*__{mesh}.json"))):
+        d = json.load(open(f))
+        cells.append(d)
+    return cells
+
+
+def fmt_row(d: dict) -> str:
+    if d.get("skipped"):
+        return (f"| {d['arch']} | {d['shape']} | skip | — | — | — | — | — | — |"
+                f" {d['reason'][:36]}… |")
+    if not d.get("ok"):
+        return f"| {d['arch']} | {d['shape']} | FAIL | | | | | | | |"
+    return (
+        f"| {d['arch']} | {d['shape']} | {d['dominant'].replace('_s','')} "
+        f"| {d['compute_s']*1e3:.2f} | {d['memory_s']*1e3:.2f} "
+        f"| {d['collective_s']*1e3:.2f} | {d['useful_flops_ratio']:.2f} "
+        f"| {d['mfu_bound']:.4f} | {d['hbm_per_device']/1e9:.2f} "
+        f"| {'OK' if d['fits_hbm'] else '** >16G **'} |"
+    )
+
+
+def main():
+    lines = []
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        if not cells:
+            continue
+        lines.append(f"\n### Mesh: {mesh} "
+                     f"({'2×16×16=512' if mesh == 'multi' else '16×16=256'} chips)\n")
+        lines.append("| arch | shape | dom | compute ms | memory ms "
+                     "| collective ms | useful | mfu_bound | HBM GB/dev | fits |")
+        lines.append("|---|---|---|---|---|---|---|---|---|---|")
+        for d in sorted(cells, key=lambda x: (x["shape"], x["arch"])):
+            lines.append(fmt_row(d))
+        ok = [d for d in cells if d.get("ok")]
+        n_skip = sum(1 for d in cells if d.get("skipped"))
+        n_fail = sum(1 for d in cells if not d.get("ok") and not d.get("skipped"))
+        lines.append(f"\ncells={len(cells)} ok={len(ok)} skip={n_skip} "
+                     f"fail={n_fail}\n")
+    report = "\n".join(lines)
+    (ART / "roofline.md").write_text(report)
+    print(report)
+
+    # hillclimb candidates (single-pod, base archs only)
+    ok = [d for d in load_cells("single")
+          if d.get("ok") and "+" not in d["arch"]]
+    worst = min(ok, key=lambda d: d["mfu_bound"])
+    coll = max(ok, key=lambda d: d["collective_s"] / max(d["bound_s"], 1e-12)
+               * (d["dominant"] == "collective_s"))
+    print(f"# worst mfu_bound: {worst['arch']} {worst['shape']} "
+          f"({worst['mfu_bound']:.5f})")
+    print(f"# most collective-bound: {coll['arch']} {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark entry point: one module per paper figure/table + kernel + roofline.
+
+``python -m benchmarks.run`` prints CSV blocks per benchmark; the roofline
+table is regenerated from the dry-run artifacts (run the dry-run sweep first
+for a complete table).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import fig2_workflows, fig3_autoscaling, kernels_bench
+    from benchmarks import roofline_report
+
+    sections = [
+        ("fig2_workflows (paper Figure 2)", fig2_workflows.main),
+        ("fig3_autoscaling (paper Figure 3)", fig3_autoscaling.main),
+        ("kernels (conversion hot spots)", kernels_bench.main),
+        ("roofline (from dry-run artifacts)", roofline_report.main),
+    ]
+    failed = []
+    for name, fn in sections:
+        print(f"\n==== {name} ====")
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED sections: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

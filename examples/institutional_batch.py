@@ -1,0 +1,49 @@
+"""Institutional-scale batch conversion — the paper's Figure 2/3 experiment.
+
+    PYTHONPATH=src python examples/institutional_batch.py [--images 50]
+
+Runs the three workflows (serial, 16-way parallel VM pool, event-driven
+autoscaling) at the paper's scale in the discrete-event simulator, calibrated
+by a real measured conversion, and prints the comparison plus the Figure-3
+instance timeline.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.fig2_workflows import (autoscaling_time, measure_service_time,
+                                       parallel_time, serial_time)
+from benchmarks.fig3_autoscaling import run as fig3_run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--images", type=int, default=50)
+    ap.add_argument("--tau", type=float, default=90.0,
+                    help="per-slide conversion seconds at paper scale")
+    args = ap.parse_args()
+
+    tau_m = measure_service_time()
+    print(f"measured per-slide conversion (256² synthetic): {tau_m:.3f}s")
+    print(f"simulating at paper scale with tau={args.tau}s\n")
+
+    print(f"{'n':>4} {'serial':>10} {'parallel16':>11} {'autoscaling':>12}")
+    for n in (1, 10, 25, args.images):
+        s = serial_time(n, args.tau)
+        p = parallel_time(n, args.tau)
+        a = autoscaling_time(n, args.tau)
+        print(f"{n:>4} {s:>9.0f}s {p:>10.0f}s {a:>11.0f}s")
+
+    print("\nFigure 3 — avg instances per minute (50-slide burst):")
+    minutes, pipe = fig3_run(n=args.images, tau=args.tau)
+    for m, v in minutes:
+        print(f"  {m:3d}m | {'#' * int(v)} {v:.0f}")
+    print(f"\ncold starts: {pipe.service.cold_starts}, "
+          f"conversions: {pipe.done_count()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Event-driven LM serving: pub/sub request intake → continuous batching.
+
+    PYTHONPATH=src python examples/serve_llm.py [--arch gemma-2b] [--requests 8]
+
+The serving analogue of the paper's pipeline: requests land on a topic, the
+engine (an autoscalable "container") consumes them with continuous batching
+over a shared KV cache, and completions publish to a response topic.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import SimScheduler, Subscription, Topic
+from repro.models import model as M
+from repro.serve.engine import ContinuousBatchingEngine, PubSubFrontend
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--kv8", action="store_true",
+                    help="int8-quantized KV cache")
+    args = ap.parse_args()
+
+    arch = args.arch + ("-smoke+kv8" if args.kv8 else "-smoke")
+    cfg = get_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"serving {cfg.name}: {args.slots} slots, kv={cfg.kv_cache_dtype}")
+
+    sched = SimScheduler()
+    req_topic = Topic("inference-requests", sched)
+    resp_topic = Topic("inference-responses", sched)
+    responses = []
+    Subscription(resp_topic, "client",
+                 lambda m, c: (responses.append(m.data), c.ack()))
+    engine = ContinuousBatchingEngine(cfg, params, batch_size=args.slots,
+                                      max_len=128)
+    PubSubFrontend(engine, req_topic, resp_topic)
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=4 + i % 5).tolist()
+        req_topic.publish({"request_id": i, "prompt": prompt,
+                           "max_new_tokens": args.max_new})
+    sched.run(until=0.0)  # deliver requests into the engine
+    engine.run_until_drained()
+    sched.run()  # flush responses
+    dt = time.time() - t0
+
+    total_tokens = sum(len(r["tokens"]) for r in responses)
+    for r in sorted(responses, key=lambda r: r["request_id"]):
+        print(f"  req {r['request_id']}: {r['tokens']}")
+    print(f"{len(responses)} responses, {total_tokens} tokens in {dt:.1f}s "
+          f"({total_tokens/dt:.1f} tok/s, {engine.steps} engine ticks — "
+          f"{total_tokens/max(engine.steps,1):.2f} tokens/tick from batching)")
+    assert len(responses) == args.requests
+
+
+if __name__ == "__main__":
+    main()

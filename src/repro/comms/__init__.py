@@ -1,0 +1,7 @@
+"""Distributed-communication helpers: gradient compression, collective utils."""
+from repro.comms.compress import (  # noqa: F401
+    ef_init,
+    ef_compress,
+    int8_dequantize,
+    int8_quantize,
+)

@@ -1,0 +1,76 @@
+"""Error-feedback int8 gradient compression.
+
+At 1000+ node scale the inter-pod (DCN / slow-link) all-reduce of fp32/bf16
+gradients dominates step time; quantizing the reduced payload to int8 with a
+per-tensor scale cuts that traffic 4× (vs fp32). Plain quantization biases the
+update, so we carry the quantization residual forward (error feedback, as in
+1-bit Adam / EF-SGD): the compressed gradient stream converges to the true one.
+
+Inside a single jit/GSPMD program the all-reduce is implicit, so the
+quantize→dequantize pair models exactly the payload that would cross the slow
+link; the ``compressed_psum`` variant is the explicit shard_map form used by
+the elastic (non-SPMD) trainer and the unit tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "int8_quantize",
+    "int8_dequantize",
+    "ef_init",
+    "ef_compress",
+    "compressed_psum",
+]
+
+
+def int8_quantize(x):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params):
+    """Zero error-feedback residual tree (fp32)."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def ef_compress(grads, ef):
+    """Quantize (grads + residual); return (dequantized grads, new residual)."""
+
+    def one(g, e):
+        tot = g.astype(jnp.float32) + e
+        q, s = int8_quantize(tot)
+        deq = int8_dequantize(q, s)
+        return deq.astype(g.dtype), tot - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_g, new_e
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-payload psum across ``axis_name`` (for use under shard_map).
+
+    Each participant quantizes its shard; the int8 payloads are summed in int32
+    (exact), then dequantized with the max scale. This is the explicit form of
+    what ``ef_compress`` models inside a single SPMD program.
+    """
+    q, s = int8_quantize(x)
+    s_max = jax.lax.pmax(s, axis_name)
+    # requantize against the shared scale so the integer sum is meaningful
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s_max), -127, 127)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * s_max

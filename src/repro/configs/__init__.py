@@ -1,0 +1,60 @@
+"""Architecture config registry.
+
+``get_config(name)`` returns the full published config; ``--arch <id>`` in the
+launchers resolves through here.  Each arch module exports ``CONFIG``.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+_ARCHS = {
+    "gemma-2b": "gemma_2b",
+    "minitron-8b": "minitron_8b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "musicgen-large": "musicgen_large",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+
+def list_archs() -> list[str]:
+    return list(_ARCHS)
+
+
+def get_config(name: str) -> ModelConfig:
+    """Resolve an arch id; ``+`` suffixes select runtime variants:
+    ``<arch>+kv8`` = int8-quantized serving KV cache."""
+    import dataclasses
+
+    parts = name.split("+")
+    name, mods = parts[0], parts[1:]
+    if name.endswith("-smoke"):
+        cfg = get_config(name[: -len("-smoke")]).reduced()
+    else:
+        if name not in _ARCHS:
+            raise KeyError(f"unknown arch {name!r}; available: {sorted(_ARCHS)}")
+        mod = importlib.import_module(f"repro.configs.{_ARCHS[name]}")
+        cfg = mod.CONFIG
+    for m in mods:
+        if m == "kv8":
+            cfg = dataclasses.replace(cfg, kv_cache_dtype="int8",
+                                      name=cfg.name + "+kv8")
+        elif m.startswith("ac"):  # attention KV-chunk override, e.g. +ac512
+            cfg = dataclasses.replace(cfg, attn_chunk=int(m[2:]),
+                                      name=cfg.name + "+" + m)
+        else:
+            raise KeyError(f"unknown variant {m!r}")
+    return cfg
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = ["get_config", "get_shape", "list_archs", "ModelConfig", "ShapeConfig", "SHAPES"]

@@ -1,0 +1,14 @@
+"""The paper's primary contribution: event-driven cloud infrastructure.
+
+Object storage with creation notifications, a topic-based pub/sub broker with
+at-least-once push delivery (ack deadlines, retries, DLQ, hedging), a
+Cloud-Run-style autoscaling worker service (0→N→0, cold starts, concurrency),
+and the Figure-1 conversion pipeline wiring — all runnable deterministically
+under a discrete-event scheduler or on real threads.
+"""
+from repro.core.autoscaler import AutoscalingService  # noqa: F401
+from repro.core.clock import RealScheduler, SimScheduler  # noqa: F401
+from repro.core.metrics import Metrics  # noqa: F401
+from repro.core.pipeline import ConversionPipeline  # noqa: F401
+from repro.core.pubsub import DeliveryCtx, Message, Subscription, Topic  # noqa: F401
+from repro.core.storage import Bucket, LifecycleRule, Object, ObjectStore  # noqa: F401

@@ -1,0 +1,230 @@
+"""Cloud-Run-style autoscaling container service.
+
+Models (and in RealScheduler mode, actually executes) the paper's serverless
+conversion backend:
+
+* instances scale **0 → max_instances** on demand and back to zero,
+* each new instance pays a **cold start** before it can serve,
+* an instance handles ``concurrency`` requests at once (paper: 1),
+* idle instances stop after ``scale_down_delay`` (Figure 3's slow decay),
+* ``min_instances`` keeps warm capacity (the paper's cold-start mitigation,
+  with its idle-cost trade-off),
+* optional per-instance failure injection for the fault-tolerance tests.
+
+The service exposes ``receive(request, done)`` — the push subscription's
+endpoint calls it; ``done(ok)`` fires when the request finishes (the HTTP 200
+of the paper). Work is supplied by a ``handler``:
+
+* sim mode — ``handler(request) -> float`` returns the service time and the
+  completion is scheduled (deterministic discrete-event execution),
+* real mode — ``handler(request) -> None`` does the actual work (e.g. runs
+  the JAX WSI→DICOM conversion) and its wall time is the service time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Callable
+
+from repro.core.metrics import Metrics
+
+__all__ = ["AutoscalingService", "Instance"]
+
+_req_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class _Request:
+    payload: object
+    done: Callable[[bool], None]
+    arrived: float
+    req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
+
+
+class Instance:
+    __slots__ = ("iid", "state", "ready_at", "idle_since", "active", "dead")
+
+    def __init__(self, iid: int, ready_at: float):
+        self.iid = iid
+        self.state = "starting"  # starting | idle | busy | stopped
+        self.ready_at = ready_at
+        self.idle_since = ready_at
+        self.active = 0
+        self.dead = False
+
+
+class AutoscalingService:
+    def __init__(
+        self,
+        name: str,
+        scheduler,
+        handler: Callable,
+        *,
+        max_instances: int = 100,
+        min_instances: int = 0,
+        concurrency: int = 1,
+        cold_start: float = 10.0,
+        scale_down_delay: float = 60.0,
+        metrics: Metrics | None = None,
+        real_work: bool = False,
+    ):
+        self.name = name
+        self.scheduler = scheduler
+        self.handler = handler
+        self.max_instances = max_instances
+        self.min_instances = min_instances
+        self.concurrency = concurrency
+        self.cold_start = cold_start
+        self.scale_down_delay = scale_down_delay
+        self.metrics = metrics or Metrics(scheduler)
+        self.real_work = real_work
+        self.instances: dict[int, Instance] = {}
+        self.queue: deque[_Request] = deque()
+        self._iid = itertools.count(1)
+        self.cold_starts = 0
+        for _ in range(min_instances):
+            self._start_instance(warm=True)
+
+    # ---- instance lifecycle ------------------------------------------------
+    def _start_instance(self, warm: bool = False) -> Instance:
+        iid = next(self._iid)
+        delay = 0.0 if warm else self.cold_start
+        inst = Instance(iid, self.scheduler.now() + delay)
+        self.instances[iid] = inst
+        if not warm:
+            self.cold_starts += 1
+            self.metrics.inc(f"svc.{self.name}.cold_starts")
+        self._record_count()
+        self.scheduler.schedule(delay, self._instance_ready, inst)
+        return inst
+
+    def _instance_ready(self, inst: Instance):
+        if inst.state != "starting" or inst.dead:
+            return
+        inst.state = "idle"
+        inst.idle_since = self.scheduler.now()
+        self._drain()
+        self._schedule_scale_down(inst)
+
+    def _schedule_scale_down(self, inst: Instance):
+        self.scheduler.schedule(self.scale_down_delay + 1e-9,
+                                self._maybe_stop, inst)
+
+    def _maybe_stop(self, inst: Instance):
+        alive = [i for i in self.instances.values()
+                 if i.state in ("starting", "idle", "busy")]
+        if (
+            inst.state == "idle"
+            and self.scheduler.now() - inst.idle_since >= self.scale_down_delay
+            and len(alive) > self.min_instances
+        ):
+            inst.state = "stopped"
+            del self.instances[inst.iid]
+            self.metrics.inc(f"svc.{self.name}.stopped")
+            self._record_count()
+        elif inst.state == "idle":
+            self._schedule_scale_down(inst)
+
+    def kill_instance(self, iid: int | None = None):
+        """Fault injection: abruptly kill an instance (in-flight work lost)."""
+        pool = [i for i in self.instances.values() if i.state != "stopped"]
+        if not pool:
+            return None
+        inst = self.instances.get(iid) if iid else pool[-1]
+        if inst is None:
+            return None
+        inst.dead = True
+        inst.state = "stopped"
+        self.instances.pop(inst.iid, None)
+        self.metrics.inc(f"svc.{self.name}.killed")
+        self._record_count()
+        return inst.iid
+
+    def _record_count(self):
+        self.metrics.record(
+            f"svc.{self.name}.instances",
+            len([i for i in self.instances.values() if i.state != "stopped"]),
+        )
+
+    # ---- request path --------------------------------------------------------
+    def receive(self, payload, done: Callable[[bool], None]):
+        req = _Request(payload, done, self.scheduler.now())
+        self.metrics.inc(f"svc.{self.name}.requests")
+        self.queue.append(req)
+        self._drain()
+        self._maybe_scale_up()
+
+    def _maybe_scale_up(self):
+        alive = [i for i in self.instances.values() if i.state != "stopped"]
+        capacity = sum(
+            self.concurrency - i.active for i in alive if not i.dead
+        )
+        need = len(self.queue) - capacity
+        while need > 0 and len(alive) < self.max_instances:
+            self._start_instance()
+            alive = [i for i in self.instances.values() if i.state != "stopped"]
+            need -= self.concurrency
+
+    def _drain(self):
+        while self.queue:
+            inst = self._pick_idle()
+            if inst is None:
+                return
+            req = self.queue.popleft()
+            self._serve(inst, req)
+
+    def _pick_idle(self) -> Instance | None:
+        best = None
+        for i in self.instances.values():
+            if i.state in ("idle", "busy") and not i.dead \
+                    and i.active < self.concurrency:
+                if best is None or i.active < best.active:
+                    best = i
+        return best
+
+    def _serve(self, inst: Instance, req: _Request):
+        inst.active += 1
+        inst.state = "busy"
+        self.metrics.record(
+            f"svc.{self.name}.queue_wait", self.scheduler.now() - req.arrived
+        )
+        if self.real_work:
+            def work():
+                ok = True
+                try:
+                    self.handler(req.payload)
+                except Exception:
+                    ok = False
+                self._finish(inst, req, ok)
+
+            self.scheduler.schedule(0.0, work)
+        else:
+            duration = float(self.handler(req.payload))
+            self.scheduler.schedule(duration, self._finish, inst, req, True)
+
+    def _finish(self, inst: Instance, req: _Request, ok: bool):
+        if inst.dead:
+            return  # killed mid-flight: no ack → pub/sub redelivers
+        inst.active -= 1
+        if inst.active == 0:
+            inst.state = "idle"
+            inst.idle_since = self.scheduler.now()
+            self._schedule_scale_down(inst)
+        self.metrics.inc(f"svc.{self.name}.completed")
+        self.metrics.record(
+            f"svc.{self.name}.latency", self.scheduler.now() - req.arrived
+        )
+        req.done(ok)
+        self._drain()
+
+    # ---- introspection ---------------------------------------------------------
+    def instance_count(self) -> int:
+        return len([i for i in self.instances.values() if i.state != "stopped"])
+
+    def stats(self) -> dict:
+        return {
+            "instances": self.instance_count(),
+            "queued": len(self.queue),
+            "cold_starts": self.cold_starts,
+        }

@@ -1,0 +1,43 @@
+"""Shared metrics/logging — the paper's "all services log to one location,
+monitored through a single dashboard"."""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+
+__all__ = ["Metrics"]
+
+
+class Metrics:
+    def __init__(self, scheduler=None):
+        self._sched = scheduler
+        self._lock = threading.Lock()
+        self.counters: dict[str, float] = defaultdict(float)
+        self.series: dict[str, list[tuple[float, float]]] = defaultdict(list)
+        self.events: list[tuple[float, str, dict]] = []
+
+    def _now(self) -> float:
+        return self._sched.now() if self._sched else 0.0
+
+    def inc(self, name: str, value: float = 1.0):
+        with self._lock:
+            self.counters[name] += value
+
+    def record(self, name: str, value: float):
+        """Append a (t, value) sample to a time series."""
+        with self._lock:
+            self.series[name].append((self._now(), value))
+
+    def log(self, kind: str, **fields):
+        with self._lock:
+            self.events.append((self._now(), kind, fields))
+
+    def timeseries(self, name: str) -> list[tuple[float, float]]:
+        with self._lock:
+            return list(self.series[name])
+
+    def summary(self) -> dict:
+        with self._lock:
+            return {"counters": dict(self.counters),
+                    "series": {k: len(v) for k, v in self.series.items()},
+                    "events": len(self.events)}

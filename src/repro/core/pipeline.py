@@ -1,0 +1,109 @@
+"""The paper's Figure-1 wiring: landing bucket → notification → pub/sub topic
+→ push subscription → autoscaling conversion service → DICOM store.
+
+``ConversionPipeline`` assembles the microservices; the actual per-image work
+is injected (`convert` callable for real execution, `service_time` model for
+discrete-event simulation), so the same wiring backs:
+
+* the real end-to-end example (synthetic SVS slides through the JAX converter
+  into DICOM Part-10 bytes in the DICOM-store bucket),
+* the Figure 2/3 simulations at institutional scale,
+* the fault-tolerance tests (killed workers, redelivery, idempotent writes).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core.autoscaler import AutoscalingService
+from repro.core.metrics import Metrics
+from repro.core.pubsub import DeliveryCtx, Message, Subscription, Topic
+from repro.core.storage import LifecycleRule, ObjectStore
+
+__all__ = ["ConversionPipeline"]
+
+
+class ConversionPipeline:
+    def __init__(
+        self,
+        scheduler,
+        *,
+        convert: Callable[[bytes, dict], bytes] | None = None,
+        service_time: Callable[[dict], float] | float = 60.0,
+        max_instances: int = 100,
+        min_instances: int = 0,
+        concurrency: int = 1,
+        cold_start: float = 10.0,
+        scale_down_delay: float = 120.0,
+        ack_deadline: float = 600.0,
+        max_delivery_attempts: int = 5,
+        hedge_after: float | None = None,
+        landing_bucket: str = "wsi-landing",
+        dicom_bucket: str = "dicom-store",
+        lifecycle_cold_after: float = 30 * 24 * 3600.0,
+        lifecycle_archive_after: float = 365 * 24 * 3600.0,
+    ):
+        self.scheduler = scheduler
+        self.metrics = Metrics(scheduler)
+        self.store = ObjectStore(scheduler, self.metrics)
+        self.convert = convert
+        self.service_time = service_time
+
+        # --- storage & ingestion service --------------------------------
+        self.landing = self.store.bucket(landing_bucket)
+        self.dicom = self.store.bucket(dicom_bucket)
+        self.landing.add_lifecycle_rule(
+            LifecycleRule(lifecycle_cold_after, "COLDLINE"))
+        self.landing.add_lifecycle_rule(
+            LifecycleRule(lifecycle_archive_after, "ARCHIVE"))
+
+        # --- pub/sub messaging service -----------------------------------
+        self.topic = Topic("wsi-dicom-conversion", scheduler, self.metrics)
+        self.dlq = Topic("wsi-dicom-conversion-dlq", scheduler, self.metrics)
+        self.landing.add_notification(self.topic, "OBJECT_FINALIZE")
+
+        # --- containerized conversion web application ---------------------
+        self.service = AutoscalingService(
+            "wsi2dcm", scheduler, self._work,
+            max_instances=max_instances, min_instances=min_instances,
+            concurrency=concurrency, cold_start=cold_start,
+            scale_down_delay=scale_down_delay, metrics=self.metrics,
+            real_work=convert is not None,
+        )
+        self.subscription = Subscription(
+            self.topic, "wsi2dcm-push", self._endpoint,
+            ack_deadline=ack_deadline,
+            max_delivery_attempts=max_delivery_attempts,
+            hedge_after=hedge_after, dlq=self.dlq,
+        )
+        self.converted: list[str] = []
+
+    # ---- subscription push endpoint → service --------------------------
+    def _endpoint(self, msg: Message, ctx: DeliveryCtx):
+        self.service.receive(msg.data, lambda ok: ctx.ack() if ok else
+                             ctx.nack("conversion failed"))
+
+    # ---- the worker ------------------------------------------------------
+    def _work(self, event: dict):
+        if self.convert is None:  # simulation: return the service time
+            st = self.service_time
+            return st(event) if callable(st) else float(st)
+        # real mode: download → convert → upload (idempotent, content-addressed)
+        obj = self.landing.get(event["name"])
+        dcm_bytes = self.convert(obj.data, dict(obj.metadata))
+        out_key = event["name"].rsplit(".", 1)[0] + ".dcm"
+        self.dicom.put(out_key, dcm_bytes,
+                       metadata={"source_generation": obj.generation})
+        self.converted.append(out_key)
+        return None
+
+    # ---- ingestion --------------------------------------------------------
+    def ingest(self, key: str, data: bytes, metadata: dict | None = None):
+        """A scanner drops a slide into the landing zone."""
+        return self.landing.put(key, data, metadata)
+
+    # ---- reporting -------------------------------------------------------
+    def instance_series(self):
+        return self.metrics.timeseries("svc.wsi2dcm.instances")
+
+    def done_count(self) -> int:
+        return int(self.metrics.counters.get("svc.wsi2dcm.completed", 0))

@@ -1,0 +1,224 @@
+"""Topic-based publish/subscribe broker with push delivery.
+
+Implements the delivery semantics the paper relies on (and that our
+fault-tolerance claims rest on):
+
+* **at-least-once** — a message leaves the subscription only on explicit ack;
+  no ack within ``ack_deadline`` ⇒ redelivery with exponential backoff,
+* **dead-lettering** — after ``max_delivery_attempts`` the message is
+  published to the DLQ topic instead of retried forever,
+* **push flow control** — at most ``max_outstanding`` in-flight deliveries
+  per subscription; excess messages queue in the backlog,
+* **ordering keys** — messages sharing a key are delivered one-at-a-time in
+  publish order (per-key serialization),
+* **hedging** (straggler mitigation, beyond the paper's GCP defaults) — an
+  optional duplicate delivery fires if no ack lands within ``hedge_after``;
+  consumers are idempotent so duplicates are harmless.
+
+The push endpoint is any callable ``endpoint(message, ctx)``; it reports
+completion via ``ctx.ack()`` / ``ctx.nack()`` (asynchronously is fine).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import defaultdict, deque
+from typing import Callable
+
+from repro.core.metrics import Metrics
+
+__all__ = ["Message", "Topic", "Subscription", "DeliveryCtx"]
+
+_msg_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class Message:
+    data: dict
+    attributes: dict = dataclasses.field(default_factory=dict)
+    ordering_key: str | None = None
+    message_id: int = dataclasses.field(default_factory=lambda: next(_msg_ids))
+    publish_time: float = 0.0
+
+
+class Topic:
+    def __init__(self, name: str, scheduler, metrics: Metrics | None = None):
+        self.name = name
+        self.scheduler = scheduler
+        self.metrics = metrics or Metrics(scheduler)
+        self.subscriptions: list[Subscription] = []
+
+    def subscribe(self, sub: "Subscription"):
+        self.subscriptions.append(sub)
+
+    def publish(self, data: dict, attributes: dict | None = None,
+                ordering_key: str | None = None) -> Message:
+        msg = Message(data=data, attributes=attributes or {},
+                      ordering_key=ordering_key,
+                      publish_time=self.scheduler.now())
+        self.metrics.inc(f"topic.{self.name}.published")
+        self.metrics.log("publish", topic=self.name, id=msg.message_id)
+        for sub in self.subscriptions:
+            sub._enqueue(msg)
+        return msg
+
+
+class DeliveryCtx:
+    """Ack handle given to push endpoints."""
+
+    def __init__(self, sub: "Subscription", msg: Message, attempt: int):
+        self.sub, self.msg, self.attempt = sub, msg, attempt
+        self.done = False
+        self.deadline_handle = None
+        self.hedge_handle = None
+
+    def ack(self):
+        if not self.done:
+            self.done = True
+            self.sub._on_ack(self)
+
+    def nack(self, reason: str = ""):
+        if not self.done:
+            self.done = True
+            self.sub._on_nack(self, reason or "nack")
+
+
+class Subscription:
+    def __init__(
+        self,
+        topic: Topic,
+        name: str,
+        endpoint: Callable[[Message, DeliveryCtx], None],
+        *,
+        ack_deadline: float = 600.0,
+        max_delivery_attempts: int = 5,
+        min_backoff: float = 10.0,
+        max_backoff: float = 600.0,
+        max_outstanding: int = 1000,
+        hedge_after: float | None = None,
+        dlq: Topic | None = None,
+    ):
+        self.topic = topic
+        self.name = name
+        self.endpoint = endpoint
+        self.scheduler = topic.scheduler
+        self.metrics = topic.metrics
+        self.ack_deadline = ack_deadline
+        self.max_delivery_attempts = max_delivery_attempts
+        self.min_backoff, self.max_backoff = min_backoff, max_backoff
+        self.max_outstanding = max_outstanding
+        self.hedge_after = hedge_after
+        self.dlq = dlq
+        self.backlog: deque[tuple[Message, int]] = deque()
+        self.outstanding: dict[int, DeliveryCtx] = {}
+        self.acked: set[int] = set()
+        self._ordered_busy: set[str] = set()
+        self._ordered_backlog: dict[str, deque] = defaultdict(deque)
+        topic.subscribe(self)
+
+    # ---- intake ----------------------------------------------------------
+    def _enqueue(self, msg: Message, attempt: int = 1):
+        if msg.ordering_key is not None:
+            if msg.ordering_key in self._ordered_busy:
+                self._ordered_backlog[msg.ordering_key].append((msg, attempt))
+                return
+            self._ordered_busy.add(msg.ordering_key)
+        self.backlog.append((msg, attempt))
+        self._pump()
+
+    def _pump(self):
+        while self.backlog and len(self.outstanding) < self.max_outstanding:
+            msg, attempt = self.backlog.popleft()
+            self._deliver(msg, attempt)
+
+    # ---- delivery --------------------------------------------------------
+    def _deliver(self, msg: Message, attempt: int):
+        if msg.message_id in self.acked:  # duplicate of an acked message
+            return
+        ctx = DeliveryCtx(self, msg, attempt)
+        self.outstanding[msg.message_id] = ctx
+        self.metrics.inc(f"sub.{self.name}.deliveries")
+        ctx.deadline_handle = self.scheduler.schedule(
+            self.ack_deadline, self._on_deadline, ctx
+        )
+        if self.hedge_after is not None:
+            ctx.hedge_handle = self.scheduler.schedule(
+                self.hedge_after, self._on_hedge, ctx
+            )
+        self.scheduler.schedule(0.0, self._push, ctx)
+
+    def _push(self, ctx: DeliveryCtx):
+        try:
+            self.endpoint(ctx.msg, ctx)
+        except Exception as e:  # endpoint crashed synchronously
+            ctx.nack(f"exception: {e}")
+
+    # ---- completion paths --------------------------------------------------
+    def _cleanup(self, ctx: DeliveryCtx):
+        self.outstanding.pop(ctx.msg.message_id, None)
+        for h in (ctx.deadline_handle, ctx.hedge_handle):
+            if h is not None:
+                h.cancel()
+        key = ctx.msg.ordering_key
+        if key is not None and ctx.msg.message_id in self.acked:
+            self._ordered_busy.discard(key)
+            if self._ordered_backlog[key]:
+                nxt, att = self._ordered_backlog[key].popleft()
+                self._enqueue(nxt, att)
+        self._pump()
+
+    def _on_ack(self, ctx: DeliveryCtx):
+        self.acked.add(ctx.msg.message_id)
+        self.metrics.inc(f"sub.{self.name}.acks")
+        self.metrics.record(
+            f"sub.{self.name}.latency",
+            self.scheduler.now() - ctx.msg.publish_time,
+        )
+        self._cleanup(ctx)
+
+    def _on_nack(self, ctx: DeliveryCtx, reason: str):
+        self.metrics.inc(f"sub.{self.name}.nacks")
+        self._cleanup(ctx)
+        self._retry(ctx, reason)
+
+    def _on_deadline(self, ctx: DeliveryCtx):
+        if ctx.done:
+            return
+        ctx.done = True
+        self.metrics.inc(f"sub.{self.name}.deadline_expired")
+        self._cleanup(ctx)
+        self._retry(ctx, "ack deadline expired")
+
+    def _on_hedge(self, ctx: DeliveryCtx):
+        """Straggler mitigation: fire a duplicate delivery, original stays."""
+        if ctx.done or ctx.msg.message_id in self.acked:
+            return
+        self.metrics.inc(f"sub.{self.name}.hedged")
+        # duplicate delivery outside the outstanding map (original still owns it)
+        dup = DeliveryCtx(self, ctx.msg, ctx.attempt)
+        self.scheduler.schedule(0.0, self._push, dup)
+
+    def _retry(self, ctx: DeliveryCtx, reason: str):
+        if ctx.attempt >= self.max_delivery_attempts:
+            self.metrics.inc(f"sub.{self.name}.dead_lettered")
+            self.metrics.log("dead_letter", sub=self.name,
+                             id=ctx.msg.message_id, reason=reason)
+            if self.dlq is not None:
+                self.dlq.publish(ctx.msg.data,
+                                 {**ctx.msg.attributes, "dlq_reason": reason})
+            return
+        backoff = min(self.min_backoff * 2 ** (ctx.attempt - 1),
+                      self.max_backoff)
+        self.metrics.log("retry", sub=self.name, id=ctx.msg.message_id,
+                         attempt=ctx.attempt, backoff=backoff, reason=reason)
+        self.scheduler.schedule(
+            backoff, lambda: self._enqueue(ctx.msg, ctx.attempt + 1)
+        )
+
+    # ---- introspection -----------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "backlog": len(self.backlog),
+            "outstanding": len(self.outstanding),
+            "acked": len(self.acked),
+        }

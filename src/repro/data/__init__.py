@@ -1,0 +1,2 @@
+"""Data pipeline: deterministic synthetic LM streams + elastic shard queue."""
+from repro.data.pipeline import ShardQueue, TokenDataset, make_lm_batch  # noqa: F401

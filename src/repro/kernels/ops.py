@@ -1,0 +1,62 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On the CPU container the kernels run in ``interpret=True`` (the kernel body
+executes in Python, validating the BlockSpec tiling); on a real TPU set
+``REPRO_PALLAS_COMPILE=1`` to lower them natively. ``impl="ref"`` falls back
+to the pure-jnp oracles (used for differential testing and odd shapes).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dct8x8_quant import dct8x8_quant_pallas
+from repro.kernels.downsample2x2 import downsample2x2_pallas
+from repro.kernels.rgb2ycbcr import rgb2ycbcr_pallas
+
+__all__ = ["rgb2ycbcr", "downsample2x2", "dct8x8_quant", "idct8x8_dequant"]
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _aligned(n: int, m: int) -> bool:
+    return n % m == 0
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def rgb2ycbcr(img, impl: str = "auto"):
+    """(3, H, W) → (3, H, W) f32 level-shifted YCbCr."""
+    if impl == "ref" or (impl == "auto" and not (
+            _aligned(img.shape[1], 8) and _aligned(img.shape[2], 128))):
+        return ref.rgb2ycbcr_ref(img)
+    return rgb2ycbcr_pallas(img, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def downsample2x2(img, impl: str = "auto"):
+    """(C, H, W) → (C, H//2, W//2) f32 box-filtered."""
+    if impl == "ref" or (impl == "auto" and not (
+            _aligned(img.shape[1], 16) and _aligned(img.shape[2], 256))):
+        return ref.downsample2x2_ref(img)
+    return downsample2x2_pallas(img, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def dct8x8_quant(plane, qtable, impl: str = "auto"):
+    """(H, W) f32 → (H, W) i32 quantized DCT coefficients."""
+    if impl == "ref" or (impl == "auto" and not (
+            _aligned(plane.shape[0], 8) and _aligned(plane.shape[1], 128))):
+        return ref.dct8x8_quant_ref(plane, qtable)
+    return dct8x8_quant_pallas(plane, qtable, interpret=_interpret())
+
+
+@jax.jit
+def idct8x8_dequant(coef, qtable):
+    """Decoder-side inverse (jnp only; used by tests and the JPEG decoder)."""
+    return ref.idct8x8_dequant_ref(coef, qtable)

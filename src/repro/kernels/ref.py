@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rgb2ycbcr_ref", "downsample2x2_ref", "dct8x8_quant_ref",
+    "idct8x8_dequant_ref", "dct_matrix", "JPEG_LUMA_Q", "JPEG_CHROMA_Q",
+]
+
+# ITU-T81 Annex K quantization tables (quality 50)
+JPEG_LUMA_Q = np.array([
+    [16, 11, 10, 16, 24, 40, 51, 61],
+    [12, 12, 14, 19, 26, 58, 60, 55],
+    [14, 13, 16, 24, 40, 57, 69, 56],
+    [14, 17, 22, 29, 51, 87, 80, 62],
+    [18, 22, 37, 56, 68, 109, 103, 77],
+    [24, 35, 55, 64, 81, 104, 113, 92],
+    [49, 64, 78, 87, 103, 121, 120, 101],
+    [72, 92, 95, 98, 112, 100, 103, 99],
+], np.float32)
+
+JPEG_CHROMA_Q = np.array([
+    [17, 18, 24, 47, 99, 99, 99, 99],
+    [18, 21, 26, 66, 99, 99, 99, 99],
+    [24, 26, 56, 99, 99, 99, 99, 99],
+    [47, 66, 99, 99, 99, 99, 99, 99],
+    [99, 99, 99, 99, 99, 99, 99, 99],
+    [99, 99, 99, 99, 99, 99, 99, 99],
+    [99, 99, 99, 99, 99, 99, 99, 99],
+    [99, 99, 99, 99, 99, 99, 99, 99],
+], np.float32)
+
+
+def dct_matrix() -> np.ndarray:
+    """Orthonormal 8×8 DCT-II matrix C (DCT: C·X·Cᵀ)."""
+    k = np.arange(8)
+    C = np.cos((2 * k[None, :] + 1) * k[:, None] * np.pi / 16)
+    C *= np.sqrt(2.0 / 8.0)
+    C[0] *= 1.0 / np.sqrt(2.0)
+    return C.astype(np.float32)
+
+
+def rgb2ycbcr_ref(img):
+    """BT.601 full-range RGB→YCbCr with JPEG level shift on Y only after
+    shift convention: returns float32 planes in [-128, 127].
+
+    img: (3, H, W) uint8/float  →  (3, H, W) float32 (Y, Cb, Cr), level-shifted
+    (Y−128, Cb−128→centered, Cr centered).
+    """
+    r, g, b = (img[i].astype(jnp.float32) for i in range(3))
+    y = 0.299 * r + 0.587 * g + 0.114 * b
+    cb = -0.168736 * r - 0.331264 * g + 0.5 * b + 128.0
+    cr = 0.5 * r - 0.418688 * g - 0.081312 * b + 128.0
+    out = jnp.stack([y, cb, cr])
+    return out - 128.0  # JPEG level shift
+
+
+def downsample2x2_ref(img):
+    """2×2 box filter, stride 2. img: (C, H, W) → (C, H//2, W//2) float32."""
+    x = img.astype(jnp.float32)
+    C, H, W = x.shape
+    x = x[:, : H - H % 2, : W - W % 2]
+    return 0.25 * (x[:, 0::2, 0::2] + x[:, 1::2, 0::2]
+                   + x[:, 0::2, 1::2] + x[:, 1::2, 1::2])
+
+
+def dct8x8_quant_ref(plane, qtable):
+    """Blockwise 8×8 DCT-II + quantization (round(X̂/Q)).
+
+    plane: (H, W) float32 level-shifted; qtable: (8, 8).
+    Returns int32 coefficients, same (H, W) layout (blocks in place).
+    """
+    H, W = plane.shape
+    assert H % 8 == 0 and W % 8 == 0
+    C = jnp.asarray(dct_matrix())
+    x = plane.astype(jnp.float32).reshape(H // 8, 8, W // 8, 8)
+    x = x.transpose(0, 2, 1, 3)  # (bh, bw, 8, 8)
+    y = jnp.einsum("ij,bcjk,lk->bcil", C, x, C)
+    q = jnp.round(y / qtable[None, None]).astype(jnp.int32)
+    return q.transpose(0, 2, 1, 3).reshape(H, W)
+
+
+def idct8x8_dequant_ref(coef, qtable):
+    """Inverse of ``dct8x8_quant_ref`` (decoder path / PSNR tests)."""
+    H, W = coef.shape
+    C = jnp.asarray(dct_matrix())
+    x = coef.astype(jnp.float32).reshape(H // 8, 8, W // 8, 8)
+    x = x.transpose(0, 2, 1, 3) * qtable[None, None]
+    y = jnp.einsum("ji,bcjk,kl->bcil", C, x, C)  # Cᵀ·X·C
+    return y.transpose(0, 2, 1, 3).reshape(H, W)

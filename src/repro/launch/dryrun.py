@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this jits the real step function (train_step for train shapes,
+prefill/decode serving steps otherwise) against ShapeDtypeStruct inputs on the
+production mesh, compiles it, and records:
+
+* ``memory_analysis()``  — per-device bytes (proves the cell fits HBM),
+* ``cost_analysis()``    — per-device FLOPs / bytes accessed,
+* HLO-parsed collective link traffic (loop-aware),
+* the derived three-term roofline (see repro.roofline).
+
+One JSON artifact per cell lands in ``artifacts/dryrun``; ``--all`` sweeps
+every cell in its own subprocess (compilation memory is returned to the OS
+between cells), skipping cells whose artifact already exists.
+
+Usage:
+    python -m repro.launch.dryrun --one <arch> <shape> <single|multi>
+    python -m repro.launch.dryrun --all [--mesh single|multi|both] [--force]
+"""
+import argparse
+import gzip
+import json
+import sys
+import time
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# gradient-accumulation microbatches for the biggest trainers (activation fit)
+TRAIN_MICROBATCHES = {
+    "command-r-plus-104b": 8,
+    "command-r-plus-104b+ac512": 4,  # smaller attn chunks free the HBM for mb=4
+    "mixtral-8x22b": 4,
+    "mixtral-8x7b": 2,
+    "zamba2-1.2b": 2,
+}
+
+
+def cell_name(arch: str, shape: str, mesh: str) -> str:
+    return f"{arch}__{shape}__{mesh}"
+
+
+def _analytic_flops(cfg, shape, n_params: int, n_active: int) -> dict:
+    """Assignment MODEL_FLOPS (6·N·D train / 2·N·D inference) + attention extra."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens, mult = B * S, 6
+    elif shape.kind == "prefill":
+        tokens, mult = B * S, 2
+    else:
+        tokens, mult = B, 2
+    model = float(mult) * n_active * tokens
+    # analytic attention math (info only; 0 for attention-free paths)
+    attn = 0.0
+    H, hd, L = cfg.num_heads, cfg.head_dim, cfg.num_layers
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        W = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        if shape.kind == "decode":
+            attn = 4.0 * B * L * H * hd * W * (mult / 2)
+        else:
+            eff = (W if cfg.sliding_window else S / 2)
+            attn = 4.0 * B * S * L * H * hd * eff * (mult / 2)
+    return {"model_flops": model, "attn_flops_analytic": attn}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             save_hlo: bool = True) -> dict:
+    import jax
+
+    from repro import sharding as shd
+    from repro.configs import get_config, get_shape
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as M
+    from repro.models.params import abstractify
+    from repro.roofline import analyze_hlo, derive_terms
+    from repro.serve import steps as sv
+    from repro.train import (TrainConfig, abstract_train_state,
+                             batch_defs, batch_shardings, make_train_step,
+                             state_shardings)
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "kind": shape.kind, "ok": False}
+    if not cfg.supports_shape(shape):
+        rec.update(skipped=True, reason="full-attention arch at 500k decode "
+                   "(sub-quadratic path required; see DESIGN.md)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(mesh.devices.size)
+    B, S = shape.global_batch, shape.seq_len
+    n_params = M.param_count(cfg)
+    n_active = M.active_param_count(cfg)
+
+    t0 = time.time()
+    with shd.set_mesh(mesh):
+        if shape.kind == "train":
+            tc = TrainConfig(microbatches=TRAIN_MICROBATCHES.get(arch, 1))
+            fn = make_train_step(cfg, tc)
+            args = (abstract_train_state(cfg, tc),
+                    abstractify(batch_defs(cfg, B, S)))
+            in_sh = (state_shardings(cfg, tc, mesh),
+                     batch_shardings(cfg, B, S, mesh))
+            out_sh = (in_sh[0], None)
+        elif shape.kind == "prefill":
+            fn = sv.make_prefill_step(cfg, max_len=S)
+            params = M.abstract_params(cfg)
+            inp = abstractify(sv.prefill_input_defs(cfg, B, S))
+            in_defs = sv.prefill_input_defs(cfg, B, S)
+            psh = shd.param_specs(M.model_defs(cfg), mesh)
+            ish = shd.param_specs(in_defs, mesh)
+            if cfg.family in ("vlm", "audio"):
+                args = (params, inp["tokens"], inp["cond"])
+                in_sh = (psh, ish["tokens"], ish["cond"])
+            else:
+                args = (params, inp["tokens"])
+                in_sh = (psh, ish["tokens"])
+            out_sh = None
+        else:  # decode
+            fn = sv.make_decode_step(cfg)
+            params = M.abstract_params(cfg)
+            cache = M.abstract_cache(cfg, B, S)
+            inp = abstractify(sv.decode_input_defs(cfg, B))
+            args = (params, cache, inp["token"], inp["pos"])
+            dsh = shd.param_specs(sv.decode_input_defs(cfg, B), mesh)
+            # weight-stationary serving: replicate weights over 'data' when
+            # the TP shard fits the budget → no per-token FSDP all-gather
+            model_ax = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+            tp_shard_bytes = 2.0 * n_params / model_ax
+            # 4 GB budget: the CPU proxy carries an extra f32 weight copy, so
+            # replication costs ~3× the bf16 shard; MoE expert stacks blow
+            # past it (mixtral: measured 18.7 GB — refuted, see §Perf)
+            policy = ("serve_replicated" if tp_shard_bytes <= 4e9 else "train")
+            rec["weight_policy"] = policy
+            in_sh = (shd.param_specs(M.model_defs(cfg), mesh, policy),
+                     shd.param_specs(M.cache_defs(cfg, B, S), mesh),
+                     dsh["token"], dsh["pos"])
+            out_sh = None
+
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        }
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+    hlo = compiled.as_text()
+    hm = analyze_hlo(hlo)
+    col = {"total": hm["collective_bytes"], "by_kind": hm["by_kind"],
+           "loops": hm["loops"]}
+
+    # cost_analysis counts while bodies once; the HLO walk is loop-aware.
+    flops_dev = max(float(cost.get("flops", 0.0)), hm["flops"])
+    bytes_dev = max(float(cost.get("bytes accessed", 0.0)), hm["bytes"])
+    analytic = _analytic_flops(cfg, shape, n_params, n_active)
+    terms = derive_terms(
+        flops_per_device=flops_dev,
+        bytes_per_device=bytes_dev,
+        collective_bytes_per_device=col["total"],
+        chips=chips,
+        model_flops_total=analytic["model_flops"],
+    )
+    terms["cost_analysis_flops"] = float(cost.get("flops", 0.0))
+    terms["cost_analysis_bytes"] = float(cost.get("bytes accessed", 0.0))
+    terms["hlo_walk_flops"] = hm["flops"]
+    terms["hlo_walk_bytes"] = hm["bytes"]
+    arg_b = mem.get("argument_bytes", 0) or 0
+    tmp_b = mem.get("temp_bytes", 0) or 0
+    out_b = mem.get("output_bytes", 0) or 0
+    rec.update(
+        ok=True, n_params=n_params, n_active=n_active,
+        flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+        collectives=col, memory=mem,
+        hbm_per_device=arg_b + tmp_b,
+        hbm_per_device_undonated=arg_b + tmp_b + out_b,
+        fits_hbm=bool(arg_b + tmp_b < 16e9),
+        **analytic, **terms,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+    )
+    if save_hlo:
+        ARTIFACTS.mkdir(parents=True, exist_ok=True)
+        with gzip.open(
+            ARTIFACTS / (cell_name(arch, shape_name, mesh_kind) + ".hlo.txt.gz"),
+            "wt",
+        ) as f:
+            f.write(hlo)
+    return rec
+
+
+def all_cells(mesh_filter: str) -> list[tuple[str, str, str]]:
+    from repro.configs import SHAPES, get_config, list_archs
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[mesh_filter]
+    cells = [
+        (arch, shape, mesh)
+        for mesh in meshes
+        for arch in list_archs()
+        for shape in SHAPES
+    ]
+    # cheap cells first: decode < prefill < train, then by d_model·layers
+    def key(c):
+        arch, shape, mesh = c
+        cfg = get_config(arch)
+        kind_rank = {"decode": 0, "prefill": 1, "train": 2}[SHAPES[shape].kind]
+        return (mesh == "multi", kind_rank,
+                cfg.d_model * cfg.num_layers * (cfg.num_experts or 1))
+    return sorted(cells, key=key)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--one", nargs=3, metavar=("ARCH", "SHAPE", "MESH"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+
+    if args.one:
+        arch, shape, mesh = args.one
+        rec = run_cell(arch, shape, mesh, save_hlo=not args.no_hlo)
+        out = ARTIFACTS / (cell_name(arch, shape, mesh) + ".json")
+        out.write_text(json.dumps(rec, indent=2, default=float))
+        status = ("SKIP" if rec.get("skipped")
+                  else "OK" if rec.get("ok") else "FAIL")
+        print(f"[{status}] {arch} {shape} {mesh} "
+              f"compile={rec.get('compile_s', '-')}s "
+              f"dominant={rec.get('dominant', '-')}")
+        return 0 if status != "FAIL" else 1
+
+    if args.all:
+        import subprocess
+
+        cells = all_cells(args.mesh)
+        if args.arch:
+            cells = [c for c in cells if c[0] == args.arch]
+        if args.shape:
+            cells = [c for c in cells if c[1] == args.shape]
+        failures = []
+        for arch, shape, mesh in cells:
+            out = ARTIFACTS / (cell_name(arch, shape, mesh) + ".json")
+            if out.exists() and not args.force:
+                prev = json.loads(out.read_text())
+                if prev.get("ok") or prev.get("skipped"):
+                    continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--one", arch, shape, mesh]
+            if args.no_hlo:
+                cmd.append("--no-hlo")
+            t0 = time.time()
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout,
+                                   capture_output=True, text=True)
+                if r.returncode != 0 and not out.exists():
+                    out.write_text(json.dumps({
+                        "arch": arch, "shape": shape, "mesh": mesh,
+                        "ok": False, "error": (r.stderr or "")[-4000:],
+                    }, indent=2))
+                if r.returncode != 0:
+                    failures.append((arch, shape, mesh))
+                    print(f"[FAIL {time.time()-t0:6.0f}s] {arch} {shape} {mesh}")
+                    print((r.stderr or "")[-1500:])
+                else:
+                    print(r.stdout.strip())
+            except subprocess.TimeoutExpired:
+                failures.append((arch, shape, mesh))
+                out.write_text(json.dumps({
+                    "arch": arch, "shape": shape, "mesh": mesh,
+                    "ok": False, "error": f"timeout {args.timeout}s",
+                }, indent=2))
+                print(f"[TIMEOUT] {arch} {shape} {mesh}")
+            sys.stdout.flush()
+        print(f"done; {len(failures)} failures: {failures}")
+        return 1 if failures else 0
+
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""Re-derive roofline terms for existing dry-run cells from their saved HLO
+(no recompilation) after a byte/collective-model change.
+
+    python -m repro.launch.reanalyze [--dir artifacts/dryrun]
+
+Cells without a saved ``.hlo.txt.gz`` are listed for recompilation.
+"""
+import argparse
+import gzip
+import json
+from pathlib import Path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=None)
+    args = ap.parse_args()
+
+    from repro.roofline import analyze_hlo, derive_terms
+
+    base = Path(args.dir) if args.dir else (
+        Path(__file__).resolve().parents[3] / "artifacts" / "dryrun")
+    missing = []
+    updated = 0
+    for jf in sorted(base.glob("*.json")):
+        d = json.loads(jf.read_text())
+        if not d.get("ok"):
+            continue
+        hf = jf.with_suffix("").with_suffix("")  # strip .json
+        hf = base / (jf.stem + ".hlo.txt.gz")
+        if not hf.exists():
+            missing.append(jf.stem)
+            continue
+        hlo = gzip.open(hf, "rt").read()
+        hm = analyze_hlo(hlo)
+        flops_dev = max(d.get("cost_analysis_flops", 0.0), hm["flops"])
+        bytes_dev = max(0.0, hm["bytes"])
+        terms = derive_terms(
+            flops_per_device=flops_dev,
+            bytes_per_device=bytes_dev,
+            collective_bytes_per_device=hm["collective_bytes"],
+            chips=d["chips"],
+            model_flops_total=d["model_flops"],
+        )
+        d["collectives"] = {"total": hm["collective_bytes"],
+                            "by_kind": hm["by_kind"], "loops": hm["loops"]}
+        d["flops_per_device"] = flops_dev
+        d["bytes_per_device"] = bytes_dev
+        d["hlo_walk_flops"] = hm["flops"]
+        d["hlo_walk_bytes"] = hm["bytes"]
+        d.update({k: v for k, v in terms.items() if k != "chips"})
+        jf.write_text(json.dumps(d, indent=2, default=float))
+        updated += 1
+    print(f"updated {updated} cells from saved HLO")
+    if missing:
+        print(f"{len(missing)} cells lack saved HLO (recompile these):")
+        for m in missing:
+            print("  ", m)
+    return 0
+
+
+if __name__ == "__main__":
+    main()

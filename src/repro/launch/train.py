@@ -1,0 +1,98 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch <id> [--smoke] [--steps N]
+        [--batch B] [--seq S] [--microbatches K] [--compress]
+        [--ckpt DIR] [--resume]
+
+On a real TPU fleet this runs under ``jax.distributed.initialize()`` with the
+production mesh; on this container use ``--smoke`` (reduced config, local
+mesh). The loop is the deployable shape: sharded state, event-driven shard
+queue, async checkpoints, restore-on-start.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="build the 2×16×16 production mesh (real fleet)")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import sharding as shd
+    from repro.configs import get_config
+    from repro.data import TokenDataset
+    from repro.launch.mesh import make_local_mesh, make_production_mesh
+    from repro.train import (TrainConfig, init_train_state, make_train_step,
+                             state_shardings)
+    from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
+                                        restore_checkpoint)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    tc = TrainConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+                     total_steps=args.steps,
+                     microbatches=args.microbatches,
+                     compress="int8_ef" if args.compress else "none")
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if not args.smoke else make_local_mesh())
+    print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    with shd.set_mesh(mesh):
+        step_fn = jax.jit(
+            make_train_step(cfg, tc),
+            in_shardings=(state_shardings(cfg, tc, mesh), None),
+            out_shardings=(state_shardings(cfg, tc, mesh), None),
+            donate_argnums=(0,),
+        )
+        state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+        start = 0
+        ck = AsyncCheckpointer(args.ckpt, keep=3) if args.ckpt else None
+        if args.resume and args.ckpt and latest_step(args.ckpt) is not None:
+            abstract = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            state, start = restore_checkpoint(
+                args.ckpt, abstract, state_shardings(cfg, tc, mesh))
+            print(f"resumed from step {start}")
+
+        ds = TokenDataset(cfg.vocab_size, args.seq, seed=0)
+        t0 = time.time()
+        m = {}
+        for i in range(start, args.steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in ds.shard_batch(i, args.batch).items()}
+            if cfg.family in ("vlm", "audio"):
+                batch["cond"] = jnp.zeros(
+                    (args.batch, cfg.n_cross_tokens, cfg.d_model), cfg.dtype)
+            state, m = step_fn(state, batch)
+            if (i + 1) % 10 == 0:
+                print(f"step {i+1:5d} loss {float(m['loss']):.4f} "
+                      f"({(time.time()-t0)/(i-start+1):.2f}s/step)")
+            if ck and (i + 1) % args.ckpt_every == 0:
+                ck.save(i + 1, state)
+        if ck:
+            ck.save(args.steps, state)
+            ck.wait()
+    print(f"finished at loss {float(m.get('loss', float('nan'))):.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,390 @@
+"""Shared transformer building blocks.
+
+Everything is functional: ``*_defs(cfg)`` returns a ParamDef tree, the
+corresponding ``*_apply`` consumes the materialized subtree.  Attention is
+implemented in a blocked, online-softmax ("flash-style") form so 32k-token
+prefill never materializes an S×S score matrix; the same primitive serves
+training, prefill, decode-against-cache, and (non-causal) cross-attention.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models.params import ParamDef
+
+NEG_INF = -1.0e30
+
+
+# --------------------------------------------------------------------------
+# norms / rope
+# --------------------------------------------------------------------------
+def rms_norm(x, w, eps: float, plus_one: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    w = w.astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    return (x * w).astype(dt)
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (B, S, H, D); positions: broadcastable to (B, S)."""
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    pos = jnp.asarray(positions, jnp.float32)
+    angles = pos[..., None] * freqs  # (B?, S, half)
+    while angles.ndim < x.ndim:  # -> (B, S, 1, half)
+        angles = jnp.expand_dims(angles, 0 if angles.ndim < 2 else -2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:rot].astype(jnp.float32)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    out = jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+    return out
+
+
+# --------------------------------------------------------------------------
+# blocked (flash-style) attention
+# --------------------------------------------------------------------------
+def blocked_attention(
+    q,
+    k,
+    v,
+    q_pos,
+    kv_pos,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+):
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, KV, D); q_pos: (B, Sq); kv_pos: (B, Skv).
+    Never materializes (Sq, Skv); peak extra memory is O(Sq · chunk).
+
+    GQA keys/values are broadcast to the full ``H`` head dim *inside* each
+    chunk (cheap: chunk-sized) so every big intermediate carries one plain
+    head axis — with heads % model == 0 the O(Sq·chunk) score/prob tensors
+    tensor-parallel cleanly, which the split (KV, G) layout cannot do.
+    The broadcast only pays when that sharding is actually possible, so it is
+    applied iff H divides the mesh's model axis; otherwise grouped KV stays
+    un-expanded (virtually, via an extra G head-group dim folded into H).
+    Each chunk body is checkpointed: the backward pass recomputes s/p instead
+    of saving them per chunk (the flash-attention recompute trade).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = D**-0.5
+    mesh = shd.current_mesh()
+    tp = 1
+    if mesh is not None and "model" in mesh.axis_names:
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    expand_kv = G > 1 and tp > 1 and H % tp == 0
+    chunk = min(chunk, Skv)
+    if Skv % chunk:  # pad KV to a chunk multiple with masked-out slots
+        pad = chunk - Skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+        Skv += pad
+    n_chunks = Skv // chunk
+
+    q32 = q.astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, KV, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, KV, D), 1, 0)
+    pc = jnp.moveaxis(kv_pos.reshape(B, n_chunks, chunk), 1, 0)
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, H, D), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj, pj = xs
+        if expand_kv and G > 1:  # broadcast grouped KV to all H heads
+            kj = jnp.repeat(kj, G, axis=2)
+            vj = jnp.repeat(vj, G, axis=2)
+            kj = shd.constrain(kj, "batch", "", "heads", "")
+        if expand_kv or G == 1:
+            s = jnp.einsum("bqhd,bchd->bhqc", q32,
+                           kj.astype(jnp.float32)) * scale
+            s = shd.constrain(s, "batch", "heads", "seq", "")
+        else:  # grouped path: no KV broadcast (heads can't TP-shard anyway)
+            qg = q32.reshape(B, Sq, KV, G, D)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qg,
+                           kj.astype(jnp.float32)) * scale
+            s = s.reshape(B, H, Sq, -1)
+        valid = pj[:, None, :] <= q_pos[:, :, None] if causal else (
+            pj[:, None, :] < 2**30
+        ) & jnp.ones((B, Sq, 1), bool)
+        if window:
+            valid = valid & (q_pos[:, :, None] - pj[:, None, :] < window)
+        valid = valid[:, None]  # (B,1,Sq,c)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        if expand_kv or G == 1:
+            pv = jnp.einsum("bhqc,bchd->bqhd", p, vj.astype(jnp.float32))
+        else:
+            pg = p.reshape(B, KV, G, Sq, -1)
+            pv = jnp.einsum("bkgqc,bckd->bqkgd", pg,
+                            vj.astype(jnp.float32)).reshape(B, Sq, H, D)
+        acc = acc * jnp.moveaxis(corr, 1, 2)[..., None] + pv
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (kc, vc, pc)
+    )
+    denom = jnp.maximum(jnp.moveaxis(l, 1, 2)[..., None], 1e-30)
+    out = (acc / denom).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention block
+# --------------------------------------------------------------------------
+def attn_defs(cfg, *, cross: bool = False) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    d = {
+        "wq": ParamDef((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((D, KV, hd), ("embed", "heads", "head_dim")),
+        "wv": ParamDef((D, KV, hd), ("embed", "heads", "head_dim")),
+        "wo": ParamDef((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+    if cross:
+        d["gate"] = ParamDef((), (), init="zeros", dtype=jnp.float32)
+    return d
+
+
+def attn_project_q(p, cfg, x, positions, *, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    # TP over heads when divisible; context-parallel fallback over seq otherwise
+    if q.shape[1] > 1:
+        q = shd.constrain(q, "batch", "seq", "heads", "head_dim")
+    return q
+
+
+def attn_project_kv(p, cfg, x, positions, *, rope: bool = True):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if rope:
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return k, v
+
+
+def attn_out(p, cfg, ctx):
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(ctx.dtype))
+    return shd.constrain(out, "batch", "seq", "embed")
+
+
+def self_attention(p, cfg, x, positions, *, window: int = 0):
+    """Full-sequence self attention (train / prefill). Returns (out, (k, v))."""
+    q = attn_project_q(p, cfg, x, positions)
+    k, v = attn_project_kv(p, cfg, x, positions)
+    pos = jnp.broadcast_to(positions, (x.shape[0], x.shape[1]))
+    ctx = blocked_attention(
+        q, k, v, pos, pos, causal=True, window=window, chunk=cfg.attn_chunk
+    )
+    return attn_out(p, cfg, ctx), (k, v)
+
+
+def cross_attention(p, cfg, x, kv_cached):
+    """Non-causal attention over a fixed (precomputed) KV set."""
+    B, S = x.shape[:2]
+    q = attn_project_q(p, cfg, x, jnp.zeros((S,), jnp.int32), rope=False)
+    k, v = kv_cached
+    n = k.shape[1]
+    zeros_q = jnp.zeros((B, S), jnp.int32)
+    zeros_kv = jnp.zeros((B, n), jnp.int32)
+    ctx = blocked_attention(
+        q, k, v, zeros_q, zeros_kv, causal=False, chunk=min(cfg.attn_chunk, n)
+    )
+    out = attn_out(p, cfg, ctx)
+    if "gate" in p:
+        out = jnp.tanh(p["gate"]).astype(out.dtype) * out
+    return out
+
+
+def quantize_kv(x, axis: int = -1):
+    """Symmetric int8 per-(token, kv-head) quantization. Returns (q, scale)."""
+    x = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=axis) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_self_attention(p, cfg, x1, k_cache, v_cache, kv_pos, pos, *,
+                          window=0, k_scale=None, v_scale=None):
+    """One-token decode against a (possibly rolling) KV cache.
+
+    Attention is a *direct* softmax over the whole cache (no chunk scan): with
+    the cache sequence dim sharded over 'model' this lowers to flash-decoding
+    (split-KV) semantics — per-shard partial scores, then O(B·H) softmax-stat
+    and O(B·H·hd) output all-reduces — instead of an all-gather of the cache.
+
+    ``k_scale``/``v_scale`` (B, W, KV) select the int8-quantized cache path
+    (per-token-per-head symmetric scales; halves serving HBM).
+
+    x1: (B, 1, D); caches: (B, W, KV, hd); kv_pos: (B, W) absolute positions of
+    cache slots (2**30 marks unwritten slots); pos: (B,) current position.
+    Returns (out, k_cache, v_cache, k_scale, v_scale).
+    """
+    q = attn_project_q(p, cfg, x1, pos[:, None])
+    k_new, v_new = attn_project_kv(p, cfg, x1, pos[:, None])
+    W = k_cache.shape[1]
+    slot = (pos % W if window else jnp.minimum(pos, W - 1)).astype(jnp.int32)
+    if k_scale is not None:
+        kq, ks = quantize_kv(k_new[:, 0])
+        vq, vs = quantize_kv(v_new[:, 0])
+        k_cache = _write_slot(k_cache, kq, slot)
+        v_cache = _write_slot(v_cache, vq, slot)
+        k_scale = _write_slot(k_scale, ks, slot)
+        v_scale = _write_slot(v_scale, vs, slot)
+        kf = k_cache.astype(jnp.float32) * k_scale[..., None]
+        vf = v_cache.astype(jnp.float32) * v_scale[..., None]
+    else:
+        k_cache = _write_slot(k_cache, k_new[:, 0], slot)
+        v_cache = _write_slot(v_cache, v_new[:, 0], slot)
+        kf = k_cache.astype(jnp.float32)
+        vf = v_cache.astype(jnp.float32)
+
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qr, kf)
+    s = s * hd**-0.5
+    valid = kv_pos <= pos[:, None]  # (B, W); unwritten slots are 2**30
+    if window:
+        valid = valid & (pos[:, None] - kv_pos < window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bkgw,bwkd->bkgd", probs, vf)
+    ctx = ctx.reshape(B, 1, H, hd).astype(x1.dtype)
+    return attn_out(p, cfg, ctx), k_cache, v_cache, k_scale, v_scale
+
+
+def write_kv_pos(kv_pos, pos, *, window: int = 0):
+    """Update the shared slot-position book-keeping for one decode step."""
+    W = kv_pos.shape[1]
+    slot = (pos % W if window else jnp.minimum(pos, W - 1)).astype(jnp.int32)
+    return jax.vmap(lambda a, s, p_: a.at[s].set(p_))(kv_pos, slot, pos)
+
+
+def _write_slot(cache, new, slot):
+    """cache: (B, W, ...); new: (B, ...); slot: (B,)."""
+    zeros = (0,) * (cache.ndim - 2)
+    return jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice(
+        c, n[None].astype(c.dtype), (s,) + zeros))(cache, new, slot)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def mlp_defs(cfg, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wg": ParamDef((D, F), ("embed", "mlp")),
+            "wu": ParamDef((D, F), ("embed", "mlp")),
+            "wd": ParamDef((F, D), ("mlp", "embed")),
+        }
+    return {  # relu2 / gelu: single up-projection
+        "wu": ParamDef((D, F), ("embed", "mlp")),
+        "wd": ParamDef((F, D), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, cfg, x):
+    dt = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(dt))
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(dt))
+        if cfg.mlp_type == "relu2":
+            h = jnp.square(jax.nn.relu(u))
+        else:
+            h = jax.nn.gelu(u)
+    h = shd.constrain(h, "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(dt))
+    return shd.constrain(out, "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+def embed_defs(cfg) -> dict:
+    d = {"table": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           init="small")}
+    if not cfg.tie_embeddings:
+        d["head"] = ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                             init="small")
+    return d
+
+
+def embed_apply(p, cfg, tokens):
+    x = jnp.take(p["table"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return shd.constrain(x, "batch", "seq", "embed")
+
+
+def logits_apply(p, cfg, x):
+    table = p.get("head", p["table"]).astype(x.dtype)
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    return shd.constrain(logits, "batch", "seq", "vocab")
+
+
+def softmax_xent_chunked(p, cfg, x, labels, mask=None):
+    """Cross-entropy over the vocab head, scanning sequence chunks so the
+    (B, S, V) logits tensor is never fully materialized."""
+    B, S, D = x.shape
+    C = min(cfg.loss_chunk, S)
+    if S % C:
+        C = S  # fall back for odd smoke shapes
+    n = S // C
+    xc = jnp.moveaxis(x.reshape(B, n, C, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, C), 1, 0)
+    mc = (
+        jnp.moveaxis(mask.reshape(B, n, C), 1, 0)
+        if mask is not None
+        else jnp.ones((n, B, C), x.dtype)
+    )
+
+    def body(carry, xs):
+        tot, cnt = carry
+        xi, li, mi = xs
+        logits = logits_apply(p, cfg, xi).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return (tot + nll.sum(), cnt + mi.sum()), None
+
+    # checkpoint: recompute each chunk's (B, C, V) logits in the backward
+    # instead of saving all n chunks' logits (that's the point of chunking)
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.float32(0.0), jnp.float32(0.0)),
+        (xc, lc, mc),
+    )
+    return tot / jnp.maximum(cnt, 1.0)

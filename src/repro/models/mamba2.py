@@ -1,0 +1,198 @@
+"""Mamba2 mixer (SSD — state-space duality, chunked scan).
+
+Follows the reference SSD algorithm: the sequence is split into chunks; each
+chunk computes its quadratic intra-chunk attention-like term, per-chunk final
+states are combined by a sequential scan over chunks, and the inter-chunk term
+projects the carried state back onto each position.  Decode is the O(1)
+recurrent update.  Channel dims (d_inner, ssm heads) are tensor-parallel over
+'model'; the (small) B/C state projections are replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models.params import ParamDef
+
+__all__ = ["mamba2_defs", "mamba2_apply", "mamba2_decode", "mamba2_state_defs"]
+
+
+def mamba2_defs(cfg) -> dict:
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.ssm_conv
+    return {
+        "norm": ParamDef((D,), ("embed",), init="ones"),
+        "wz": ParamDef((D, DI), ("embed", "tp")),
+        "wx": ParamDef((D, DI), ("embed", "tp")),
+        "wB": ParamDef((D, N), ("embed", "")),
+        "wC": ParamDef((D, N), ("embed", "")),
+        "wdt": ParamDef((D, H), ("embed", "tp")),
+        "conv_x": ParamDef((W, DI), ("", "tp"), scale=0.5),
+        "conv_B": ParamDef((W, N), ("", ""), scale=0.5),
+        "conv_C": ParamDef((W, N), ("", ""), scale=0.5),
+        "A_log": ParamDef((H,), ("tp",), init="zeros"),
+        "dt_bias": ParamDef((H,), ("tp",), init="zeros"),
+        "D_skip": ParamDef((H,), ("tp",), init="ones"),
+        "gnorm": ParamDef((DI,), ("tp",), init="ones"),
+        "wo": ParamDef((DI, D), ("tp", "embed")),
+    }
+
+
+def mamba2_state_defs(cfg, batch: int) -> dict:
+    """Decode-state ShapeDtype layout for one layer."""
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    W = cfg.ssm_conv
+    return {
+        "conv_x": ParamDef((batch, W - 1, DI), ("batch", "", "tp"), init="zeros"),
+        "conv_B": ParamDef((batch, W - 1, N), ("batch", "", ""), init="zeros"),
+        "conv_C": ParamDef((batch, W - 1, N), ("batch", "", ""), init="zeros"),
+        "ssm": ParamDef((batch, H, P, N), ("batch", "tp", "", ""),
+                        dtype=jnp.float32, init="zeros"),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return out
+
+
+def _project(p, cfg, x):
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"].astype(dt_))
+    Bp = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(dt_))
+    Cp = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dt_))
+    return z, xs, Bp, Cp, dt
+
+
+def mamba2_apply(p, cfg, x, *, chunk: int = 64, return_state: bool = False):
+    """Full-sequence SSD. x: (B, S, D) -> (out, final_state | None).
+
+    A checkpointed scan over sequence chunks: each chunk computes its
+    quadratic intra-chunk term and state update locally (the (Q, Q) decay
+    tensor lives only inside one chunk's body and is rematerialized in the
+    backward pass), and the carried (B, H, P, N) state provides the
+    inter-chunk contribution.
+    """
+    B, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xr, Br, Cr, dt = _project(p, cfg, x)
+    xs = jax.nn.silu(_causal_conv(xr, p["conv_x"].astype(xr.dtype)))
+    Bp = jax.nn.silu(_causal_conv(Br, p["conv_B"].astype(Br.dtype)))
+    Cp = jax.nn.silu(_causal_conv(Cr, p["conv_C"].astype(Cr.dtype)))
+    xs = shd.constrain(xs, "batch", "seq", "tp")
+
+    Q = min(chunk, S)
+    if S % Q:
+        Q = S
+    NC = S // Q
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    xh = xs.reshape(B, NC, Q, H, P).astype(jnp.float32)
+    Bc = Bp.reshape(B, NC, Q, N).astype(jnp.float32)
+    Cc = Cp.reshape(B, NC, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, NC, Q, H)
+    Lmask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def per_chunk(st_in, xs_):
+        xh_, Bc_, Cc_, dt_ = xs_  # (B,Q,H,P), (B,Q,N), (B,Q,N), (B,Q,H)
+        xh_ = shd.constrain(xh_, "batch", "", "", "")
+        dA = dt_ * A  # (B,Q,H)
+        cum = jnp.cumsum(dA, axis=1)
+        xdt = xh_ * dt_[..., None]
+        # intra-chunk quadratic term (clamp before exp: valid (t>=s) entries
+        # are <= 0 in log space; unclamped masked entries poison the grad)
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,t,s,H)
+        decay = jnp.exp(jnp.minimum(ldiff, 0.0))
+        decay = jnp.where(Lmask[None, :, :, None], decay, 0.0)
+        att = jnp.einsum("btn,bsn->bts", Cc_, Bc_)[..., None] * decay
+        y = jnp.einsum("btsh,bshp->bthp", att, xdt)
+        # inter-chunk term from the carried state
+        y = y + jnp.einsum("btn,bth,bhpn->bthp", Cc_, jnp.exp(cum), st_in)
+        # state update
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        st_new = st_in * jnp.exp(cum[:, -1])[..., None, None] + jnp.einsum(
+            "bsn,bsh,bshp->bhpn", Bc_, decay_end, xdt
+        )
+        return st_new, y
+
+    st0 = jnp.zeros((B, H, P, N), jnp.float32)
+    final_state, ys = jax.lax.scan(
+        jax.checkpoint(per_chunk),
+        st0,
+        tuple(jnp.moveaxis(t, 1, 0) for t in (xh, Bc, Cc, dtc)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    y = y + xs.reshape(B, S, H, P).astype(jnp.float32) * p["D_skip"].astype(
+        jnp.float32
+    )[None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner)
+
+    out = _gate_norm_out(p, cfg, y, z)
+    if return_state:
+        conv_tail = {
+            "conv_x": xs_tail(xr, cfg.ssm_conv),
+            "conv_B": xs_tail(Br, cfg.ssm_conv),
+            "conv_C": xs_tail(Cr, cfg.ssm_conv),
+            "ssm": final_state,
+        }
+        return out, conv_tail
+    return out, None
+
+
+def xs_tail(x, width):
+    """Last (width-1) raw inputs, as the decode conv state."""
+    return x[:, -(width - 1):, :]
+
+
+def _gate_norm_out(p, cfg, y, z):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # gated RMSNorm over d_inner
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + cfg.norm_eps)
+    y = y * p["gnorm"].astype(jnp.float32)
+    y = y.astype(z.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(z.dtype))
+    return shd.constrain(out, "batch", "seq", "embed")
+
+
+def mamba2_decode(p, cfg, x1, state):
+    """One-token recurrent step. x1: (B, 1, D); state: see mamba2_state_defs."""
+    B = x1.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z, xs, Bp, Cp, dt = _project(p, cfg, x1)
+
+    def step_conv(buf, new, w):
+        # buf: (B, W-1, C); new: (B, 1, C) -> (out (B,C), new_buf)
+        full = jnp.concatenate([buf, new], axis=1)  # (B, W, C)
+        out = jnp.einsum("bwc,wc->bc", full, w)
+        return out, full[:, 1:, :]
+
+    cx, ncx = step_conv(state["conv_x"].astype(xs.dtype), xs,
+                        p["conv_x"].astype(xs.dtype))
+    cB, ncB = step_conv(state["conv_B"].astype(Bp.dtype), Bp,
+                        p["conv_B"].astype(Bp.dtype))
+    cC, ncC = step_conv(state["conv_C"].astype(Cp.dtype), Cp,
+                        p["conv_C"].astype(Cp.dtype))
+    cx, cB, cC = jax.nn.silu(cx), jax.nn.silu(cB), jax.nn.silu(cC)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dts = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+    dA = jnp.exp(dts * A)  # (B,H)
+    xh = cx.reshape(B, H, P).astype(jnp.float32)
+    ssm = state["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dts, xh, cB.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cC.astype(jnp.float32))
+    y = y + xh * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner)
+    out = _gate_norm_out(p, cfg, y, z)
+    new_state = {"conv_x": ncx, "conv_B": ncB, "conv_C": ncC, "ssm": ssm}
+    return out, new_state

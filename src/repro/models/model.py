@@ -1,0 +1,665 @@
+"""Model assembly for the architecture zoo.
+
+One functional LM covering six families behind a single interface:
+
+* ``model_defs(cfg)``              — ParamDef tree (scan-stacked layers)
+* ``init_params`` / ``abstract_params``
+* ``forward(params, cfg, tokens, cond=..., mode="train")`` — full-sequence
+  forward; ``mode="prefill"`` additionally returns a decode cache
+* ``lm_loss(params, cfg, batch)``  — next-token xent (+ MoE aux)
+* ``cache_defs(cfg, batch, max_len)`` — decode-state ParamDef tree
+* ``decode_step(params, cfg, cache, token, pos)`` — one serving step
+
+Families:
+  dense  — [norm→attn, norm→mlp] or Cohere-style parallel block
+  moe    — attention + top-k expert FFN (SWA rolling KV)
+  audio  — musicgen: self-attn + cross-attn (text cond) + mlp, every layer
+  vlm    — llama-3.2-vision: cross-attn image block before every 5th layer
+  hybrid — zamba2: Mamba2 backbone, weight-shared attn+mlp block every 6
+  ssm    — rwkv6: time-mix + channel-mix
+
+All full-sequence paths scan over stacked layer parameters (compile time is
+O(1) in depth) with a configurable remat policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models import layers as lyr
+from repro.models import mamba2 as mb
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv
+from repro.models.params import ParamDef, abstractify, count_params, materialize
+
+__all__ = [
+    "model_defs",
+    "init_params",
+    "abstract_params",
+    "forward",
+    "lm_loss",
+    "cache_defs",
+    "decode_step",
+    "param_count",
+    "active_param_count",
+    "zamba_groups",
+]
+
+
+# --------------------------------------------------------------------------
+# parameter trees
+# --------------------------------------------------------------------------
+def _stack(defs, n: int):
+    """Add a leading stacked-layers axis to every ParamDef in a tree."""
+    return jax.tree_util.tree_map(
+        lambda d: dataclasses.replace(
+            d, shape=(n,) + d.shape, logical=("layers",) + d.logical
+        ),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _norm_def(cfg):
+    return ParamDef((cfg.d_model,), ("embed",), init="ones")
+
+
+def _dense_layer_defs(cfg) -> dict:
+    d = {"norm1": _norm_def(cfg), "attn": lyr.attn_defs(cfg)}
+    if cfg.parallel_block:
+        d["mlp"] = lyr.mlp_defs(cfg)
+    else:
+        d["norm2"] = _norm_def(cfg)
+        d["mlp"] = lyr.mlp_defs(cfg)
+    return d
+
+
+def _moe_layer_defs(cfg) -> dict:
+    return {
+        "norm1": _norm_def(cfg),
+        "attn": lyr.attn_defs(cfg),
+        "norm2": _norm_def(cfg),
+        "moe": moe_mod.moe_defs(cfg),
+    }
+
+
+def _audio_layer_defs(cfg) -> dict:
+    return {
+        "norm1": _norm_def(cfg),
+        "attn": lyr.attn_defs(cfg),
+        "norm_x": _norm_def(cfg),
+        "xattn": lyr.attn_defs(cfg),
+        "norm2": _norm_def(cfg),
+        "mlp": lyr.mlp_defs(cfg),
+    }
+
+
+def _cross_block_defs(cfg) -> dict:
+    return {"norm_x": _norm_def(cfg), "xattn": lyr.attn_defs(cfg, cross=True)}
+
+
+def zamba_groups(cfg) -> list[int]:
+    """Mamba-layer counts between shared-block applications."""
+    every = cfg.shared_attn_every
+    L = cfg.num_layers
+    out = []
+    while L > 0:
+        out.append(min(every, L))
+        L -= every
+    return out
+
+
+def model_defs(cfg) -> dict:
+    d = {"embed": lyr.embed_defs(cfg), "final_norm": _norm_def(cfg)}
+    fam = cfg.family
+    L = cfg.num_layers
+    if fam == "dense":
+        d["layers"] = _stack(_dense_layer_defs(cfg), L)
+    elif fam == "moe":
+        d["layers"] = _stack(_moe_layer_defs(cfg), L)
+    elif fam == "audio":
+        d["layers"] = _stack(_audio_layer_defs(cfg), L)
+    elif fam == "vlm":
+        d["layers"] = _stack(_dense_layer_defs(cfg), L)
+        d["cross"] = _stack(_cross_block_defs(cfg), L // cfg.cross_attn_every)
+    elif fam == "hybrid":
+        d["layers"] = _stack(mb.mamba2_defs(cfg), L)
+        d["shared"] = {
+            "norm1": _norm_def(cfg),
+            "attn": lyr.attn_defs(cfg),
+            "norm2": _norm_def(cfg),
+            "mlp": lyr.mlp_defs(cfg),
+        }
+    elif fam == "ssm":
+        d["layers"] = _stack(rwkv.rwkv_defs(cfg), L)
+    else:  # pragma: no cover
+        raise ValueError(f"unknown family {fam!r}")
+    return d
+
+
+def init_params(cfg, key):
+    return materialize(model_defs(cfg), key)
+
+
+def abstract_params(cfg):
+    return abstractify(model_defs(cfg))
+
+
+def param_count(cfg) -> int:
+    return count_params(model_defs(cfg))
+
+
+def active_param_count(cfg) -> int:
+    """Params touched per token (MoE: top-k of E experts)."""
+    n = param_count(cfg)
+    if cfg.num_experts:
+        expert = 3 * cfg.d_model * cfg.d_ff  # wg, wu, wd
+        inactive = cfg.num_layers * (cfg.num_experts - cfg.num_experts_per_tok) * expert
+        n -= inactive
+    return n
+
+
+# --------------------------------------------------------------------------
+# remat
+# --------------------------------------------------------------------------
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # "nothing": recompute everything
+
+
+# --------------------------------------------------------------------------
+# layer bodies (full sequence)
+# --------------------------------------------------------------------------
+def _apply_dense(pl, cfg, x, positions):
+    h = lyr.rms_norm(x, pl["norm1"], cfg.norm_eps)
+    attn_out, kv = lyr.self_attention(pl["attn"], cfg, h, positions,
+                                      window=cfg.sliding_window)
+    if cfg.parallel_block:
+        x = x + attn_out + lyr.mlp_apply(pl["mlp"], cfg, h)
+    else:
+        x = x + attn_out
+        h2 = lyr.rms_norm(x, pl["norm2"], cfg.norm_eps)
+        x = x + lyr.mlp_apply(pl["mlp"], cfg, h2)
+    return x, kv
+
+
+def _apply_moe(pl, cfg, x, positions):
+    h = lyr.rms_norm(x, pl["norm1"], cfg.norm_eps)
+    attn_out, kv = lyr.self_attention(pl["attn"], cfg, h, positions,
+                                      window=cfg.sliding_window)
+    x = x + attn_out
+    h2 = lyr.rms_norm(x, pl["norm2"], cfg.norm_eps)
+    moe_out, aux = moe_mod.moe_apply(pl["moe"], cfg, h2)
+    return x + moe_out, kv, aux
+
+
+def _apply_cross(pl, cfg, x, cond):
+    """Cross-attention sub-block; KV computed from the conditioning stream."""
+    h = lyr.rms_norm(x, pl["norm_x"], cfg.norm_eps)
+    k, v = lyr.attn_project_kv(pl["xattn"], cfg, cond, None, rope=False)
+    out = lyr.cross_attention(pl["xattn"], cfg, h, (k, v))
+    return x + out, (k, v)
+
+
+def _apply_audio(pl, cfg, x, positions, cond):
+    h = lyr.rms_norm(x, pl["norm1"], cfg.norm_eps)
+    attn_out, kv = lyr.self_attention(pl["attn"], cfg, h, positions)
+    x = x + attn_out
+    x, xkv = _apply_cross({"norm_x": pl["norm_x"], "xattn": pl["xattn"]}, cfg, x, cond)
+    h2 = lyr.rms_norm(x, pl["norm2"], cfg.norm_eps)
+    x = x + lyr.mlp_apply(pl["mlp"], cfg, h2)
+    return x, kv, xkv
+
+
+def _apply_shared(ps, cfg, x, positions):
+    """Zamba2 weight-shared attention+MLP block."""
+    h = lyr.rms_norm(x, ps["norm1"], cfg.norm_eps)
+    attn_out, kv = lyr.self_attention(ps["attn"], cfg, h, positions)
+    x = x + attn_out
+    h2 = lyr.rms_norm(x, ps["norm2"], cfg.norm_eps)
+    x = x + lyr.mlp_apply(ps["mlp"], cfg, h2)
+    return x, kv
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward
+# --------------------------------------------------------------------------
+def forward(params, cfg, tokens, *, cond=None, mode: str = "train"):
+    """tokens: (B, S) int32; cond: (B, n_cross, D) for vlm/audio.
+
+    Returns (hidden (B, S, D), aux_loss, cache_parts) where cache_parts is a
+    dict of per-layer KV/state stacks when ``mode == "prefill"`` else {}.
+    """
+    B, S = tokens.shape
+    want = mode == "prefill"
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = lyr.embed_apply(params["embed"], cfg, tokens)
+    aux = jnp.float32(0.0)
+    parts: dict = {}
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        def body(x, pl):
+            x, kv = _apply_dense(pl, cfg, x, positions)
+            return x, kv if want else None
+
+        if fam == "dense":
+            x, kvs = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+            if want:
+                parts["k"], parts["v"] = kvs
+        else:  # vlm: cross block + `every` self layers per group
+            every = cfg.cross_attn_every
+            ng = cfg.num_layers // every
+            grouped = jax.tree_util.tree_map(
+                lambda a: a.reshape((ng, every) + a.shape[1:]), params["layers"]
+            )
+
+            cross_fn = _maybe_remat(
+                lambda x_, pc: _apply_cross(pc, cfg, x_, cond), cfg
+            )
+
+            def group(x, xs):
+                pc, pg = xs
+                x, xkv = cross_fn(x, pc)
+                x, kvs = jax.lax.scan(_maybe_remat(body, cfg), x, pg)
+                return x, (kvs, xkv) if want else None
+
+            x, ys = jax.lax.scan(group, x, (params["cross"], grouped))
+            if want:
+                (k, v), (xk, xv) = ys[0], ys[1]
+                parts["k"] = k.reshape((cfg.num_layers,) + k.shape[2:])
+                parts["v"] = v.reshape((cfg.num_layers,) + v.shape[2:])
+                parts["cross_k"], parts["cross_v"] = xk, xv
+
+    elif fam == "moe":
+        def body(carry, pl):
+            x, aux = carry
+            x, kv, a = _apply_moe(pl, cfg, x, positions)
+            return (x, aux + a), kv if want else None
+
+        (x, aux), kvs = jax.lax.scan(
+            _maybe_remat(body, cfg), (x, aux), params["layers"]
+        )
+        if want:
+            parts["k"], parts["v"] = kvs
+
+    elif fam == "audio":
+        def body(x, pl):
+            x, kv, xkv = _apply_audio(pl, cfg, x, positions, cond)
+            return x, (kv, xkv) if want else None
+
+        x, ys = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        if want:
+            (parts["k"], parts["v"]), (parts["cross_k"], parts["cross_v"]) = ys
+
+    elif fam == "hybrid":
+        def mbody(x, pl):
+            h = lyr.rms_norm(x, pl["norm"], cfg.norm_eps)
+            out, st = mb.mamba2_apply(pl, cfg, h, return_state=want)
+            return x + out, st
+
+        groups = zamba_groups(cfg)
+        shared_fn = _maybe_remat(
+            lambda x_, ps: _apply_shared(ps, cfg, x_, positions), cfg
+        )
+        skv, states = [], []
+        start = 0
+        for cnt in groups:
+            x, kv = shared_fn(x, params["shared"])
+            sl = jax.tree_util.tree_map(
+                lambda a: a[start : start + cnt], params["layers"]
+            )
+            x, st = jax.lax.scan(_maybe_remat(mbody, cfg), x, sl)
+            start += cnt
+            if want:
+                skv.append(kv)
+                states.append(st)
+        if want:
+            parts["shared_k"] = jnp.stack([k for k, _ in skv])
+            parts["shared_v"] = jnp.stack([v for _, v in skv])
+            parts["mamba"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs), *states
+            )
+
+    elif fam == "ssm":
+        def body(x, pl):
+            x, st = rwkv.rwkv_block(pl, cfg, x)
+            return x, st if want else None
+
+        x, states = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        if want:
+            parts["rwkv"] = states
+
+    else:  # pragma: no cover
+        raise ValueError(fam)
+
+    x = lyr.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, parts
+
+
+def lm_loss(params, cfg, batch):
+    """batch: {"tokens": (B,S), "labels": (B,S)[, "cond": (B,n,D)]}."""
+    x, aux, _ = forward(
+        params, cfg, batch["tokens"], cond=batch.get("cond"), mode="train"
+    )
+    loss = lyr.softmax_xent_chunked(params["embed"], cfg, x, batch["labels"])
+    return loss + 0.01 * aux
+
+
+# --------------------------------------------------------------------------
+# decode caches
+# --------------------------------------------------------------------------
+def _kv_int8(cfg) -> bool:
+    return cfg.kv_cache_dtype == "int8"
+
+
+def _kv_cache_def(cfg, n_layers, batch, W, *, quantizable: bool = True):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    dtype = jnp.int8 if (quantizable and _kv_int8(cfg)) else cfg.dtype
+    return ParamDef(
+        (n_layers, batch, W, KV, hd),
+        ("layers", "batch", "kvseq", "heads", "head_dim"),
+        dtype=dtype,
+        init="zeros",
+    )
+
+
+def _kv_scale_def(cfg, n_layers, batch, W):
+    return ParamDef(
+        (n_layers, batch, W, cfg.num_kv_heads),
+        ("layers", "batch", "kvseq", "heads"),
+        dtype=jnp.float32,
+        init="zeros",
+    )
+
+
+def cache_defs(cfg, batch: int, max_len: int) -> dict:
+    """Decode-state ParamDef tree. ``max_len`` is the KV window the serving
+    shape demands; SWA archs cap it at their window (rolling buffer)."""
+    fam = cfg.family
+    L = cfg.num_layers
+    d: dict = {}
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv_pos = ParamDef((batch, W), ("batch", "kvseq"), dtype=jnp.int32,
+                      init="unwritten")
+    if fam in ("dense", "moe", "audio", "vlm"):
+        d["k"] = _kv_cache_def(cfg, L, batch, W)
+        d["v"] = _kv_cache_def(cfg, L, batch, W)
+        d["kv_pos"] = kv_pos
+        if _kv_int8(cfg):
+            d["k_scale"] = _kv_scale_def(cfg, L, batch, W)
+            d["v_scale"] = _kv_scale_def(cfg, L, batch, W)
+    if fam in ("audio", "vlm"):
+        nx = L if cfg.cross_attn_all_layers else L // cfg.cross_attn_every
+        # cross KV stays bf16 (small, computed once per request)
+        d["cross_k"] = _kv_cache_def(cfg, nx, batch, cfg.n_cross_tokens,
+                                     quantizable=False)
+        d["cross_v"] = _kv_cache_def(cfg, nx, batch, cfg.n_cross_tokens,
+                                     quantizable=False)
+    if fam == "hybrid":
+        d["mamba"] = _stack(mb.mamba2_state_defs(cfg, batch), L)
+        ns = len(zamba_groups(cfg))
+        d["shared_k"] = _kv_cache_def(cfg, ns, batch, W)
+        d["shared_v"] = _kv_cache_def(cfg, ns, batch, W)
+        d["kv_pos"] = kv_pos
+    if fam == "ssm":
+        d["rwkv"] = _stack(rwkv.rwkv_state_defs(cfg, batch), L)
+    return d
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Materialized zero cache (kv_pos slots marked unwritten)."""
+    defs = cache_defs(cfg, batch, max_len)
+
+    def make(d: ParamDef):
+        if d.init == "unwritten":
+            return jnp.full(d.shape, 2**30, d.dtype)
+        return jnp.zeros(d.shape, d.dtype)
+
+    return jax.tree_util.tree_map(
+        make, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+def abstract_cache(cfg, batch: int, max_len: int):
+    return abstractify(cache_defs(cfg, batch, max_len))
+
+
+# --------------------------------------------------------------------------
+# one-token decode
+# --------------------------------------------------------------------------
+def decode_step(params, cfg, cache, token, pos):
+    """token: (B, 1) int32; pos: (B,) int32. Returns (logits (B, V), cache)."""
+    fam = cfg.family
+    x = lyr.embed_apply(params["embed"], cfg, token)
+    new_cache = dict(cache)
+    win = cfg.sliding_window
+
+    if "kv_pos" in cache:
+        kv_pos = lyr.write_kv_pos(cache["kv_pos"], pos, window=win)
+        new_cache["kv_pos"] = kv_pos
+
+    int8 = _kv_int8(cfg)
+
+    def _kv_xs(kc, vc):
+        if int8:
+            return (kc, vc, cache["k_scale"], cache["v_scale"])
+        return (kc, vc, None, None)
+
+    def _store_kv(nc, ys):
+        if int8:
+            nc["k"], nc["v"], nc["k_scale"], nc["v_scale"] = ys
+        else:
+            nc["k"], nc["v"] = ys[0], ys[1]
+
+    if fam in ("dense", "moe"):
+        def body(x, xs):
+            pl, kc, vc, ks, vs = xs
+            h = lyr.rms_norm(x, pl["norm1"], cfg.norm_eps)
+            a, kc, vc, ks, vs = lyr.decode_self_attention(
+                pl["attn"], cfg, h, kc, vc, kv_pos, pos, window=win,
+                k_scale=ks, v_scale=vs,
+            )
+            if fam == "moe":
+                x = x + a
+                h2 = lyr.rms_norm(x, pl["norm2"], cfg.norm_eps)
+                m, _ = moe_mod.moe_apply(pl["moe"], cfg, h2)
+                x = x + m
+            elif cfg.parallel_block:
+                x = x + a + lyr.mlp_apply(pl["mlp"], cfg, h)
+            else:
+                x = x + a
+                h2 = lyr.rms_norm(x, pl["norm2"], cfg.norm_eps)
+                x = x + lyr.mlp_apply(pl["mlp"], cfg, h2)
+            return x, (kc, vc) + ((ks, vs) if int8 else ())
+
+        x, ys = jax.lax.scan(
+            body, x, (params["layers"],) + _kv_xs(cache["k"], cache["v"])
+        )
+        _store_kv(new_cache, ys)
+
+    elif fam == "audio":
+        def body(x, xs):
+            pl, kc, vc, ks, vs, xk, xv = xs
+            h = lyr.rms_norm(x, pl["norm1"], cfg.norm_eps)
+            a, kc, vc, ks, vs = lyr.decode_self_attention(
+                pl["attn"], cfg, h, kc, vc, kv_pos, pos,
+                k_scale=ks, v_scale=vs,
+            )
+            x = x + a
+            h2 = lyr.rms_norm(x, pl["norm_x"], cfg.norm_eps)
+            x = x + lyr.cross_attention(pl["xattn"], cfg, h2, (xk, xv))
+            h3 = lyr.rms_norm(x, pl["norm2"], cfg.norm_eps)
+            x = x + lyr.mlp_apply(pl["mlp"], cfg, h3)
+            return x, (kc, vc) + ((ks, vs) if int8 else ())
+
+        x, ys = jax.lax.scan(
+            body, x,
+            (params["layers"],) + _kv_xs(cache["k"], cache["v"])
+            + (cache["cross_k"], cache["cross_v"]),
+        )
+        _store_kv(new_cache, ys)
+
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        ng = cfg.num_layers // every
+        regroup = lambda a: (
+            a.reshape((ng, every) + a.shape[1:]) if a is not None else None
+        )
+        grouped = jax.tree_util.tree_map(regroup, params["layers"])
+        kv_xs = tuple(regroup(a) for a in _kv_xs(cache["k"], cache["v"]))
+
+        def self_body(x, xs):
+            pl, kc, vc, ks, vs = xs
+            h = lyr.rms_norm(x, pl["norm1"], cfg.norm_eps)
+            a, kc, vc, ks, vs = lyr.decode_self_attention(
+                pl["attn"], cfg, h, kc, vc, kv_pos, pos,
+                k_scale=ks, v_scale=vs,
+            )
+            x = x + a
+            h2 = lyr.rms_norm(x, pl["norm2"], cfg.norm_eps)
+            x = x + lyr.mlp_apply(pl["mlp"], cfg, h2)
+            return x, (kc, vc) + ((ks, vs) if int8 else ())
+
+        def group(x, xs):
+            pc, pg, kc, vc, ks, vs, xk, xv = xs
+            h = lyr.rms_norm(x, pc["norm_x"], cfg.norm_eps)
+            x = x + lyr.cross_attention(pc["xattn"], cfg, h, (xk, xv))
+            x, ys = jax.lax.scan(self_body, x, (pg, kc, vc, ks, vs))
+            return x, ys
+
+        x, ys = jax.lax.scan(
+            group, x,
+            (params["cross"], grouped) + kv_xs
+            + (cache["cross_k"], cache["cross_v"]),
+        )
+        unflat = lambda a: a.reshape((cfg.num_layers,) + a.shape[2:])
+        new_cache["k"], new_cache["v"] = unflat(ys[0]), unflat(ys[1])
+        if int8:
+            new_cache["k_scale"] = unflat(ys[2])
+            new_cache["v_scale"] = unflat(ys[3])
+
+    elif fam == "hybrid":
+        def mbody(x, xs):
+            pl, st = xs
+            h = lyr.rms_norm(x, pl["norm"], cfg.norm_eps)
+            out, st = mb.mamba2_decode(pl, cfg, h, st)
+            return x + out, st
+
+        groups = zamba_groups(cfg)
+        sk, sv = cache["shared_k"], cache["shared_v"]
+        states = []
+        start = 0
+        for g, cnt in enumerate(groups):
+            h = lyr.rms_norm(x, params["shared"]["norm1"], cfg.norm_eps)
+            a, nk, nv, _, _ = lyr.decode_self_attention(
+                params["shared"]["attn"], cfg, h, sk[g], sv[g], kv_pos, pos
+            )
+            sk, sv = sk.at[g].set(nk), sv.at[g].set(nv)
+            x = x + a
+            h2 = lyr.rms_norm(x, params["shared"]["norm2"], cfg.norm_eps)
+            x = x + lyr.mlp_apply(params["shared"]["mlp"], cfg, h2)
+            pl = jax.tree_util.tree_map(
+                lambda a_: a_[start : start + cnt], params["layers"]
+            )
+            stl = jax.tree_util.tree_map(
+                lambda a_: a_[start : start + cnt], cache["mamba"]
+            )
+            x, st = jax.lax.scan(mbody, x, (pl, stl))
+            states.append(st)
+            start += cnt
+        new_cache["shared_k"], new_cache["shared_v"] = sk, sv
+        new_cache["mamba"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs), *states
+        )
+
+    elif fam == "ssm":
+        def body(x, xs):
+            pl, st = xs
+            x, st = rwkv.rwkv_block_decode(pl, cfg, x, st)
+            return x, st
+
+        x, st = jax.lax.scan(body, x, (params["layers"], cache["rwkv"]))
+        new_cache["rwkv"] = st
+
+    else:  # pragma: no cover
+        raise ValueError(fam)
+
+    x = lyr.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lyr.logits_apply(params["embed"], cfg, x)[:, 0]
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------
+# prefill → cache
+# --------------------------------------------------------------------------
+def prefill(params, cfg, tokens, *, cond=None, max_len: int | None = None):
+    """Run the full prompt and build a decode cache of size ``max_len``.
+
+    Returns (last_token_logits (B, V), cache).
+    """
+    B, S = tokens.shape
+    max_len = max_len or S
+    x, _, parts = forward(params, cfg, tokens, cond=cond, mode="prefill")
+    cache = init_cache(cfg, B, max_len)
+    win = cfg.sliding_window
+    W = min(max_len, win) if win else max_len
+
+    def tail_of(src):
+        # src: (L, B, S, KV, hd) → the last min(S, W) positions, slot-ordered
+        keep = min(S, W)
+        src_tail = src[:, :, S - keep :]
+        if win and S > W:
+            # rolling buffer: slot of absolute position p is p % W
+            order = jnp.argsort(jnp.arange(S - keep, S) % W)
+            src_tail = src_tail[:, :, order]
+        return src_tail, keep
+
+    def place_kv(dst, src):
+        src_tail, keep = tail_of(src)
+        return dst.at[:, :, :keep].set(src_tail.astype(dst.dtype))
+
+    if "k" in cache and "k" in parts:
+        if _kv_int8(cfg):
+            for side in ("k", "v"):
+                src_tail, keep = tail_of(parts[side])
+                q, scale = lyr.quantize_kv(src_tail)
+                cache[side] = cache[side].at[:, :, :keep].set(q)
+                cache[side + "_scale"] = (
+                    cache[side + "_scale"].at[:, :, :keep].set(scale)
+                )
+        else:
+            cache["k"] = place_kv(cache["k"], parts["k"])
+            cache["v"] = place_kv(cache["v"], parts["v"])
+    if "shared_k" in cache:
+        cache["shared_k"] = place_kv(cache["shared_k"], parts["shared_k"])
+        cache["shared_v"] = place_kv(cache["shared_v"], parts["shared_v"])
+    if "kv_pos" in cache:
+        keep = min(S, W)
+        pos_tail = jnp.arange(S - keep, S, dtype=jnp.int32)
+        if win and S > W:
+            pos_tail = pos_tail[jnp.argsort(pos_tail % W)]
+        kv_pos = cache["kv_pos"].at[:, :keep].set(pos_tail[None])
+        cache["kv_pos"] = kv_pos
+    if "cross_k" in cache and "cross_k" in parts:
+        cache["cross_k"] = parts["cross_k"].astype(cache["cross_k"].dtype)
+        cache["cross_v"] = parts["cross_v"].astype(cache["cross_v"].dtype)
+    if "mamba" in cache:
+        cache["mamba"] = jax.tree_util.tree_map(
+            lambda dst, src: src.astype(dst.dtype), cache["mamba"], parts["mamba"]
+        )
+    if "rwkv" in cache:
+        cache["rwkv"] = jax.tree_util.tree_map(
+            lambda dst, src: src.astype(dst.dtype), cache["rwkv"], parts["rwkv"]
+        )
+    logits = lyr.logits_apply(params["embed"], cfg, x[:, -1:])[:, 0]
+    return logits, cache

@@ -1,0 +1,106 @@
+"""Declarative parameter definitions.
+
+Every model in the zoo declares its parameters as a pytree of ``ParamDef``
+(shape + logical axis names + dtype).  From that single declaration we derive:
+
+* materialized parameters (``materialize``) for real runs,
+* abstract ``jax.ShapeDtypeStruct`` trees (``abstractify``) for the dry-run
+  (no memory is ever allocated for the full-size models),
+* ``PartitionSpec`` trees (see ``repro.sharding``) for pjit in/out shardings,
+* analytic parameter counts for the roofline's ``6*N*D`` term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ParamDef",
+    "materialize",
+    "abstractify",
+    "count_params",
+    "tree_defs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    logical: tuple[str, ...]  # logical axis name per dim ("" = never sharded)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | small
+    scale: float | None = None  # stddev override for "normal"
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(
+                f"shape {self.shape} and logical axes {self.logical} rank mismatch"
+            )
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_defs(tree):
+    """Flatten a pytree of ParamDef into (paths, defs)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=_is_def)
+    return flat
+
+
+def _fan_in(d: ParamDef) -> int:
+    if not d.shape:
+        return 1
+    if len(d.shape) == 1:
+        return d.shape[0]
+    # weights are stored (in_dims..., out_dims...) by convention; treat all but
+    # the final axis as fan-in, skipping a leading stacked-layer axis.
+    dims = d.shape[:-1]
+    if d.logical and d.logical[0] == "layers":
+        dims = dims[1:] or (1,)
+    return int(np.prod(dims))
+
+
+def materialize(defs, key, dtype_override=None):
+    """Initialize real parameter arrays for a ParamDef tree."""
+    flat = tree_defs(defs)
+    keys = jax.random.split(key, max(len(flat), 1))
+    out = {}
+    leaves = []
+    for (path, d), k in zip(flat, keys):
+        dtype = dtype_override or d.dtype
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, dtype)
+        else:
+            std = d.scale if d.scale is not None else 1.0 / math.sqrt(max(_fan_in(d), 1))
+            if d.init == "small":
+                std = 0.02
+            arr = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(defs, is_leaf=_is_def)
+    out = jax.tree_util.tree_unflatten(treedef, leaves)
+    return out
+
+
+def abstractify(defs):
+    """ShapeDtypeStruct tree for lowering without allocation."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=_is_def
+    )
+
+
+def count_params(defs) -> int:
+    return sum(d.size for _, d in tree_defs(defs))

@@ -1,0 +1,320 @@
+"""RWKV6 (Finch) — attention-free time-mix with data-dependent decay.
+
+Implements the Finch recurrence
+
+    out_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+    S_t   = diag(w_t) S_{t-1} + k_tᵀ v_t          (w_t per key channel)
+
+in three forms sharing one parameter set:
+
+* ``wkv_sequential`` — the O(S) per-step oracle (tests only),
+* ``wkv_chunked``    — the parallel training/prefill form: sequence chunks of
+  ``Q`` positions, sub-blocks of ``q`` inside each chunk. All decay factors are
+  expressed as ``exp(Δ)`` with Δ ≤ 0 by factoring every cross-position decay
+  through a boundary that lies between source and target (the same trick the
+  GLA/FLA chunked kernels use), so nothing overflows regardless of how extreme
+  the learned decays are.
+* ``wkv_decode``     — the O(1) recurrent decode update.
+
+Token-shift ("ddlerp") and the decay LoRA follow the published Finch
+formulation; LayerNorms are replaced by RMSNorm for codebase uniformity
+(recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models.params import ParamDef
+
+__all__ = [
+    "rwkv_defs",
+    "rwkv_state_defs",
+    "rwkv_block",
+    "rwkv_block_decode",
+    "wkv_sequential",
+    "wkv_chunked",
+    "wkv_decode",
+]
+
+N_MIX = 5  # w, k, v, r, g token-shift mixes
+
+
+# --------------------------------------------------------------------------
+# parameter / state definitions
+# --------------------------------------------------------------------------
+def rwkv_defs(cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    H, K = cfg.num_heads, cfg.head_dim
+    R, Rd = cfg.rwkv_lora_dim, cfg.rwkv_decay_lora_dim
+    return {
+        "norm_tm": ParamDef((D,), ("embed",), init="ones"),
+        "norm_cm": ParamDef((D,), ("embed",), init="ones"),
+        # time-mix token shift (ddlerp)
+        "mu_x": ParamDef((D,), ("embed",), init="zeros"),
+        "mu5": ParamDef((N_MIX, D), ("", "embed"), init="zeros"),
+        "tm_w1": ParamDef((D, N_MIX * R), ("embed", ""), scale=0.01),
+        "tm_w2": ParamDef((N_MIX, R, D), ("", "", "embed"), scale=0.01),
+        # data-dependent decay
+        "w0": ParamDef((D,), ("embed",), init="zeros"),
+        "td_w1": ParamDef((D, Rd), ("embed", ""), scale=0.01),
+        "td_w2": ParamDef((Rd, D), ("", "embed"), scale=0.01),
+        "u": ParamDef((H, K), ("heads", ""), init="zeros"),
+        # projections
+        "wr": ParamDef((D, D), ("embed", "tp")),
+        "wk": ParamDef((D, D), ("embed", "tp")),
+        "wv": ParamDef((D, D), ("embed", "tp")),
+        "wg": ParamDef((D, D), ("embed", "tp")),
+        "wo": ParamDef((D, D), ("tp", "embed")),
+        "ln_x": ParamDef((D,), ("embed",), init="ones"),
+        # channel-mix
+        "mu_k": ParamDef((D,), ("embed",), init="zeros"),
+        "mu_r": ParamDef((D,), ("embed",), init="zeros"),
+        "cm_k": ParamDef((D, F), ("embed", "mlp")),
+        "cm_v": ParamDef((F, D), ("mlp", "embed")),
+        "cm_r": ParamDef((D, D), ("embed", "tp")),
+    }
+
+
+def rwkv_state_defs(cfg, batch: int) -> dict:
+    """Decode-state layout for one layer."""
+    D, H, K = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wkv": ParamDef((batch, H, K, K), ("batch", "heads", "", ""),
+                        dtype=jnp.float32, init="zeros"),
+        "shift_tm": ParamDef((batch, D), ("batch", "embed"), init="zeros"),
+        "shift_cm": ParamDef((batch, D), ("batch", "embed"), init="zeros"),
+    }
+
+
+# --------------------------------------------------------------------------
+# wkv cores
+# --------------------------------------------------------------------------
+def wkv_sequential(r, k, v, logw, u, state):
+    """Oracle: explicit per-step recurrence.
+
+    r/k/v/logw: (B, S, H, K) fp32; u: (H, K); state: (B, H, K, K).
+    Returns (out (B, S, H, K), final_state).
+    """
+
+    def step(s, xs):
+        rt, kt, vt, lw = xs  # (B, H, K)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lw)[..., None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def wkv_chunked(r, k, v, logw, u, state, *, chunk: int = 64, sub: int = 16):
+    """Parallel chunked form; exact (up to fp) match of ``wkv_sequential``.
+
+    All tensors fp32. r/k/v/logw: (B, S, H, K); state: (B, H, K, V=K).
+    """
+    B, S, H, K = r.shape
+    Q = min(chunk, S)
+    if S % Q:
+        Q = S
+    q = min(sub, Q)
+    if Q % q:
+        q = Q
+    ns = Q // q
+    NC = S // Q
+
+    def per_chunk(state, xs):
+        rc, kc, vc, lw = xs  # (B, Q, H, K)
+        rc = shd.constrain(rc, "batch", "", "", "")
+        kc = shd.constrain(kc, "batch", "", "", "")
+        L = jnp.cumsum(lw, axis=1)  # inclusive log-decay
+        Lex = L - lw  # exclusive
+        Lend = L[:, -1]  # (B, H, K)
+
+        # --- inter-chunk: carried state projected onto every position -----
+        out = jnp.einsum("bqhk,bhkv->bqhv", rc * jnp.exp(Lex), state)
+
+        # --- cross-sub-block (within chunk), boundary-factored -------------
+        # boundary log-decay at the start of each target sub-block
+        Lb = jnp.concatenate(
+            [jnp.zeros((B, 1, H, K), L.dtype), L[:, q - 1 :: q][:, : ns - 1]],
+            axis=1,
+        )  # (B, ns, H, K);  Lb[j] = L at position j*q - 1 (0 for j=0)
+        rg = rc.reshape(B, ns, q, H, K)
+        Lexg = Lex.reshape(B, ns, q, H, K)
+        r2 = rg * jnp.exp(jnp.minimum(Lexg - Lb[:, :, None], 0.0))
+        # k2[j, s] = k_s · exp(Lb[j] - L_s), masked to s < j*q
+        k2 = k_dec = jnp.exp(jnp.minimum(Lb[:, :, None] - L[:, None], 0.0))
+        k2 = kc[:, None] * k_dec  # (B, ns, Q, H, K)
+        smask = jnp.arange(Q)[None, :] < (jnp.arange(ns) * q)[:, None]  # (ns, Q)
+        att_x = jnp.einsum("bjthk,bjshk->bjhts", r2, k2)
+        att_x = att_x * smask[None, :, None, None, :]
+        out_x = jnp.einsum("bjhts,bshv->bjthv", att_x, vc)
+        out = out + out_x.reshape(B, Q, H, K)
+
+        # --- diagonal sub-blocks: explicit log-diff (t, s in same block) --
+        kg = kc.reshape(B, ns, q, H, K)
+        vg = vc.reshape(B, ns, q, H, K)
+        Lg = L.reshape(B, ns, q, H, K)
+        Ldiff = jnp.minimum(Lexg[:, :, :, None] - Lg[:, :, None], 0.0)
+        # (B, ns, t, s, H, K)
+        tri = jnp.tril(jnp.ones((q, q), bool), -1)
+        att_d = jnp.einsum(
+            "bjthk,bjshk,bjtshk->bjhts",
+            rg, kg, jnp.where(tri[None, None, :, :, None, None], jnp.exp(Ldiff), 0.0),
+        )
+        out_d = jnp.einsum("bjhts,bjshv->bjthv", att_d, vg)
+        # u-bonus diagonal (s == t)
+        out_u = (rg * u[None, None, None] * kg).sum(-1, keepdims=True) * vg
+        out = out + (out_d + out_u).reshape(B, Q, H, K)
+
+        # --- state update --------------------------------------------------
+        kdec = kc * jnp.exp(jnp.minimum(Lend[:, None] - L, 0.0))
+        state = state * jnp.exp(Lend)[..., None] + jnp.einsum(
+            "bqhk,bqhv->bhkv", kdec, vc
+        )
+        return state, out
+
+    xs = tuple(
+        jnp.moveaxis(t.reshape(B, NC, Q, H, K), 1, 0) for t in (r, k, v, logw)
+    )
+    # checkpoint each chunk: backward recomputes the (B, ns, q, q, H, K)
+    # intra-chunk tensors instead of saving them for every chunk — without
+    # this, 32k-token training stores O(S·q·K) fp32 residuals per layer.
+    state, outs = jax.lax.scan(jax.checkpoint(per_chunk), state, xs)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, K), state
+
+
+def wkv_decode(r1, k1, v1, logw1, u, state):
+    """One-token update. r1/k1/v1/logw1: (B, H, K); state: (B, H, K, V)."""
+    kv = k1[..., :, None] * v1[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", r1, state + u[None, :, :, None] * kv)
+    state = jnp.exp(logw1)[..., None] * state + kv
+    return out, state
+
+
+# --------------------------------------------------------------------------
+# full block (time-mix + channel-mix)
+# --------------------------------------------------------------------------
+def _ddlerp(p, x, xprev):
+    """Finch data-dependent token-shift. Returns the 5 mixed inputs."""
+    B, S, D = x.shape
+    xx = xprev - x
+    xxx = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, p["tm_w1"].astype(x.dtype)))
+    lora = lora.reshape(B, S, N_MIX, -1)
+    deltas = jnp.einsum("bsmr,mrd->bsmd", lora, p["tm_w2"].astype(x.dtype))
+    mixed = x[:, :, None] + xx[:, :, None] * (
+        p["mu5"].astype(x.dtype)[None, None] + deltas
+    )
+    return [mixed[:, :, i] for i in range(N_MIX)]
+
+
+def _decay(p, xw):
+    ww = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dr->bsr", xw.astype(jnp.float32), p["td_w1"].astype(jnp.float32)
+    ) @ p["td_w2"].astype(jnp.float32)
+    return -jnp.exp(jnp.clip(ww, -20.0, 20.0))  # log w  (strictly < 0)
+
+
+def _head_norm(p, cfg, y):
+    """Per-head RMS norm of the wkv output (stands in for Finch's GroupNorm)."""
+    B, S, H, K = y.shape
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + 64e-5)
+    return y.reshape(B, S, H * K) * p["ln_x"].astype(y.dtype)
+
+
+def _time_mix(p, cfg, x, xprev, wkv_state, *, decode: bool):
+    from repro.models.layers import rms_norm  # local import to avoid cycle
+
+    B, S, D = x.shape
+    H, K = cfg.num_heads, cfg.head_dim
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xprev)
+    dt = x.dtype
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)).reshape(B, S, H, K)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt)).reshape(B, S, H, K)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt)).reshape(B, S, H, K)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt)))
+    logw = _decay(p, xw).reshape(B, S, H, K)
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["u"].astype(jnp.float32)
+    if decode:
+        y, wkv_state = wkv_decode(
+            r32[:, 0], k32[:, 0], v32[:, 0], logw[:, 0], u, wkv_state
+        )
+        y = y[:, None]
+    else:
+        r32 = shd.constrain(r32, "batch", "seq", "heads", "head_dim")
+        y, wkv_state = wkv_chunked(r32, k32, v32, logw, u, wkv_state)
+    y = _head_norm(p, cfg, y).astype(dt) * g
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt))
+    return shd.constrain(out, "batch", "seq", "embed"), wkv_state
+
+
+def _channel_mix(p, cfg, x, xprev):
+    dt = x.dtype
+    xx = xprev - x
+    xk = x + xx * p["mu_k"].astype(dt)
+    xr = x + xx * p["mu_r"].astype(dt)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["cm_k"].astype(dt))
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = shd.constrain(kk, "batch", "seq", "mlp")
+    kv = jnp.einsum("bsf,fd->bsd", kk, p["cm_v"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_r"].astype(dt)))
+    return shd.constrain(rr * kv, "batch", "seq", "embed")
+
+
+def _shifted(x, first):
+    """x_{t-1} with ``first`` (B, D) in slot 0."""
+    return jnp.concatenate([first[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv_block(p, cfg, x, state=None):
+    """Full-sequence block. x: (B, S, D). state: rwkv_state_defs layout or None.
+
+    Returns (x_out, new_state | None).
+    """
+    from repro.models.layers import rms_norm
+
+    B, S, D = x.shape
+    H, K = cfg.num_heads, cfg.head_dim
+    if state is None:
+        wkv0 = jnp.zeros((B, H, K, K), jnp.float32)
+        sh_tm = jnp.zeros((B, D), x.dtype)
+        sh_cm = jnp.zeros((B, D), x.dtype)
+        keep = False
+    else:
+        wkv0, sh_tm, sh_cm = (
+            state["wkv"], state["shift_tm"].astype(x.dtype),
+            state["shift_cm"].astype(x.dtype),
+        )
+        keep = True
+    h = rms_norm(x, p["norm_tm"], cfg.norm_eps)
+    tm_out, wkv = _time_mix(p, cfg, h, _shifted(h, sh_tm), wkv0, decode=False)
+    x = x + tm_out
+    h2 = rms_norm(x, p["norm_cm"], cfg.norm_eps)
+    x = x + _channel_mix(p, cfg, h2, _shifted(h2, sh_cm))
+    new_state = None
+    if keep or state is None:
+        new_state = {"wkv": wkv, "shift_tm": h[:, -1], "shift_cm": h2[:, -1]}
+    return x, new_state
+
+
+def rwkv_block_decode(p, cfg, x1, state):
+    """One-token block. x1: (B, 1, D); state per rwkv_state_defs."""
+    from repro.models.layers import rms_norm
+
+    h = rms_norm(x1, p["norm_tm"], cfg.norm_eps)
+    tm_out, wkv = _time_mix(
+        p, cfg, h, state["shift_tm"].astype(h.dtype)[:, None], state["wkv"],
+        decode=True,
+    )
+    x1 = x1 + tm_out
+    h2 = rms_norm(x1, p["norm_cm"], cfg.norm_eps)
+    cm_out = _channel_mix(
+        p, cfg, h2, state["shift_cm"].astype(h2.dtype)[:, None]
+    )
+    x1 = x1 + cm_out
+    return x1, {"wkv": wkv, "shift_tm": h[:, 0], "shift_cm": h2[:, 0]}

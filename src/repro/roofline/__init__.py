@@ -1,0 +1,3 @@
+"""Roofline analysis: HLO collective parsing + three-term derivation."""
+from repro.roofline.hlo import analyze_hlo, collective_traffic, shape_bytes  # noqa: F401
+from repro.roofline.terms import HW, derive_terms  # noqa: F401

@@ -1,0 +1,318 @@
+"""Post-partitioning HLO text analysis — loop-aware roofline inputs.
+
+``compiled.cost_analysis()`` has two gaps for our purposes:
+
+1. it does not expose collective bytes at all, and
+2. it counts ``while``-loop bodies **once**, so any scan-over-layers program
+   (all of ours) under-reports FLOPs/bytes by ~the layer count.
+
+This module parses the optimized, SPMD-partitioned HLO text (per-device
+shapes) and produces loop-aware totals:
+
+* **collectives** — per-device link traffic per op kind, ring-algorithm
+  accounting (see ``_traffic``), multiplied by loop trip counts,
+* **flops** — 2·M·N·K for every ``dot`` (fusion bodies included), multiplied
+  by trip counts,
+* **bytes** — per-kernel HBM traffic model: for every top-level op in an
+  executed computation, result bytes + resolvable operand bytes (fusion
+  internals excluded — they live in registers/VMEM). Two CPU-backend
+  artifacts are discounted because they would not exist on the TPU target:
+  (a) dtype/layout-only fusions (the CPU upcasts bf16 dot inputs to f32 and
+  hoists whole-array converts — native-bf16 MXUs don't), and (b) in-place
+  ``dynamic-update-slice`` buffers, where only the updated slice moves, not
+  the whole KV cache,
+* trip counts come from the ``backend_config known_trip_count`` XLA attaches
+  to scan-lowered whiles (fallback: largest integer constant in the loop
+  condition).
+
+Residual known bias: f32 dot reads of bf16 weights inflate weight traffic by
+≤2× on this CPU proxy; recorded in EXPERIMENTS.md §Roofline methodology.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "collective_traffic", "shape_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s([\w\-]+)\("
+)
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{[\d, ]*\}[^=]*?\}|\[[\d,]+\]<=\[[^\]]*\](?:T\([\d,]+\))?)"
+)
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "copy",
+}
+
+# ops that leave a fusion "layout/dtype-only" (zero-traffic on the TPU target)
+_LAYOUT_ONLY = {
+    "convert", "bitcast", "copy", "reshape", "transpose", "broadcast",
+    "parameter", "tuple", "get-tuple-element", "constant", "slice",
+}
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 2
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0].strip()
+        if not first:
+            return 1
+        return first.count(",") + 1
+    dims = re.match(r"\[(\d+)(?:,(\d+))?\]", g)
+    if dims and dims.group(2):
+        return int(dims.group(2))
+    return 2
+
+
+def _traffic(kind: str, result_bytes: int, g: int) -> float:
+    """Per-device ring-collective link bytes (documented in EXPERIMENTS.md)."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(result_bytes) * (g - 1)  # result is the shard
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)  # collective-permute
+
+
+def _split_computations(hlo: str) -> tuple[dict, str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        if cur is None and stripped.endswith("{"):
+            m = re.match(r"^\s*(ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if cur is not None and stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _classify_comp(lines: list[str]) -> str:
+    """'layout' (dtype/layout-only), 'dus' (contains dynamic-update-slice),
+    'slice' (dynamic-slice + layout-only ops), or 'compute'."""
+    has_dus = False
+    has_ds = False
+    compute = False
+    for ln in lines:
+        m = _OPLINE_RE.match(ln)
+        if not m:
+            continue
+        op = m.group(3)
+        if op == "dynamic-update-slice":
+            has_dus = True
+        elif op in ("dynamic-slice", "gather"):
+            has_ds = True
+        elif op not in _LAYOUT_ONLY:
+            compute = True
+    if has_dus:
+        return "dus"
+    if has_ds and not compute:
+        return "slice"
+    return "compute" if compute else "layout"
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps, entry = _split_computations(hlo)
+    comp_kind = {name: _classify_comp(lines) for name, lines in comps.items()}
+
+    # global name -> (dims, bytes) for operand resolution
+    shapes: dict[str, tuple[list[int] | None, int]] = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = _OPLINE_RE.match(ln)
+            if m:
+                name, shape_str, _ = m.groups()
+                shapes[name] = (_first_shape_dims(shape_str),
+                                shape_bytes(shape_str))
+            elif "parameter(" in ln:
+                pm = re.match(r"^\s*%([\w.\-]+)\s*=\s*(.+?)\sparameter\(", ln)
+                if pm:
+                    shapes[pm.group(1)] = (
+                        _first_shape_dims(pm.group(2)),
+                        shape_bytes(pm.group(2)),
+                    )
+
+    own: dict[str, dict] = {}
+    loop_edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    fusion_edges: dict[str, list[str]] = defaultdict(list)
+    loops: list[tuple[str, int]] = []
+
+    for name, lines in comps.items():
+        kinds: dict[str, float] = defaultdict(float)
+        flops = 0.0
+        bts = 0.0
+        for ln in lines:
+            m = _OPLINE_RE.match(ln)
+            if not m:
+                continue
+            _, shape_str, op = m.groups()
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in _COLLECTIVES and not op.endswith("-done"):
+                kinds[base_op] += _traffic(
+                    base_op, shape_bytes(shape_str), _group_size(ln)
+                )
+            if op == "dot":
+                cm = _LHS_CONTRACT_RE.search(ln)
+                paren = ln[m.end():]
+                ops_ = _OPERAND_RE.findall(paren.split("),")[0].split("), ")[0])
+                k = 1
+                if cm and ops_:
+                    lhs_dims = shapes.get(ops_[0], (None, 0))[0]
+                    if lhs_dims:
+                        for idx in cm.group(1).split(","):
+                            if idx and int(idx) < len(lhs_dims):
+                                k *= lhs_dims[int(idx)]
+                rdims = _first_shape_dims(shape_str) or []
+                out = 1
+                for d in rdims:
+                    out *= d
+                flops += 2.0 * out * k
+            if op == "while":
+                wm = _WHILE_RE.search(ln)
+                if wm:
+                    cond, body = wm.groups()
+                    tm = _TRIP_RE.search(ln)
+                    if tm:
+                        trip = int(tm.group(1))
+                    else:
+                        consts = [int(c) for c in _CONST_RE.findall(
+                            "\n".join(comps.get(cond, [])))]
+                        trip = max(consts) if consts else 1
+                    loop_edges[name].append((body, trip))
+                    loop_edges[name].append((cond, trip))
+                    loops.append((body, trip))
+            if op in ("fusion", "call"):
+                fm = _CALLS_RE.search(ln) or re.search(r"to_apply=%?([\w.\-]+)", ln)
+                if fm:
+                    fusion_edges[name].append(fm.group(1))
+            if op not in _SKIP_BYTES_OPS and op != "while":
+                res_b = shape_bytes(shape_str)
+                paren = ln[m.end():]
+                arg_str = paren.split("), ")[0]
+                op_bytes = [shapes[o][1] for o in _OPERAND_RE.findall(arg_str)
+                            if o in shapes]
+                kind = "compute"
+                if op == "fusion":
+                    fm = _CALLS_RE.search(ln)
+                    if fm:
+                        kind = comp_kind.get(fm.group(1), "compute")
+                elif op == "dynamic-update-slice":
+                    kind = "dus"
+                elif op in ("dynamic-slice", "gather"):
+                    kind = "slice"
+                elif op in _LAYOUT_ONLY:
+                    kind = "layout"
+                if kind == "layout":
+                    pass  # fused away / native-dtype on the TPU target
+                elif kind == "slice":
+                    bts += 2.0 * res_b
+                elif kind == "dus":
+                    # in-place buffer update: only the slice moves
+                    small = [b for b in op_bytes if b != res_b]
+                    bts += 2.0 * sum(small)
+                else:
+                    bts += res_b + sum(op_bytes)
+        own[name] = {"kinds": dict(kinds), "flops": flops, "bytes": bts}
+
+    memo: dict[str, dict] = {}
+
+    def resolve(name: str, stack=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in own:
+            return {"kinds": {}, "flops": 0.0, "bytes": 0.0}
+        kinds = defaultdict(float, own[name]["kinds"])
+        flops = own[name]["flops"]
+        bts = own[name]["bytes"]
+        for callee in fusion_edges.get(name, []):
+            sub = resolve(callee, stack + (name,))
+            flops += sub["flops"]  # fusion-internal dots count; bytes don't
+            for k, v in sub["kinds"].items():
+                kinds[k] += v
+        for callee, trip in loop_edges.get(name, []):
+            sub = resolve(callee, stack + (name,))
+            flops += sub["flops"] * trip
+            bts += sub["bytes"] * trip
+            for k, v in sub["kinds"].items():
+                kinds[k] += v * trip
+        memo[name] = {"kinds": dict(kinds), "flops": flops, "bytes": bts}
+        return memo[name]
+
+    if entry is None:
+        res = max((resolve(n) for n in own),
+                  key=lambda r: r["flops"] + sum(r["kinds"].values()),
+                  default={"kinds": {}, "flops": 0.0, "bytes": 0.0})
+    else:
+        res = resolve(entry)
+    return {
+        "collective_bytes": float(sum(res["kinds"].values())),
+        "by_kind": res["kinds"],
+        "flops": res["flops"],
+        "bytes": res["bytes"],
+        "loops": loops[:64],
+    }
+
+
+def collective_traffic(hlo: str) -> dict:
+    """Back-compat wrapper: collective numbers only."""
+    r = analyze_hlo(hlo)
+    return {"total": r["collective_bytes"], "by_kind": r["by_kind"],
+            "loops": r["loops"], "ops": None}

@@ -1,0 +1,59 @@
+"""Three-term roofline derivation (TPU v5e targets).
+
+    compute term    = HLO_FLOPs_total   / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes_total   / (chips × HBM_bw)
+    collective term = link_bytes/device / link_bw
+
+``cost_analysis()`` of an SPMD executable reports *per-partition* numbers, so
+totals are per-device × chips (the division by chips then cancels — we keep
+the assignment's formula explicitly for clarity).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["HW", "derive_terms"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # bytes/s / chip
+    link_bw: float = 50e9  # bytes/s / ICI link
+    hbm_bytes: float = 16e9  # capacity / chip
+
+
+def derive_terms(
+    *,
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    chips: int,
+    model_flops_total: float,
+    hw: HW = HW(),
+) -> dict:
+    compute_s = flops_per_device / hw.peak_flops
+    memory_s = bytes_per_device / hw.hbm_bw
+    collective_s = collective_bytes_per_device / hw.link_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+    model_compute_s = model_flops_total / (chips * hw.peak_flops)
+    return {
+        **terms,
+        "dominant": dominant,
+        "bound_s": bound_s,
+        "hlo_flops_total": flops_per_device * chips,
+        "hlo_bytes_total": bytes_per_device * chips,
+        "model_flops_total": model_flops_total,
+        # fraction of compiled compute that is "useful" model math
+        "useful_flops_ratio": (
+            model_flops_total / (flops_per_device * chips)
+            if flops_per_device else 0.0
+        ),
+        # end-to-end MFU upper bound implied by the compiled program
+        "mfu_bound": model_compute_s / bound_s if bound_s else 0.0,
+        "chips": chips,
+    }

@@ -1,0 +1,7 @@
+"""Serving: step builders + the event-driven continuous-batching engine."""
+from repro.serve.steps import (  # noqa: F401
+    decode_input_defs,
+    make_decode_step,
+    make_prefill_step,
+    prefill_input_defs,
+)

@@ -1,0 +1,161 @@
+"""Continuous-batching serving engine with event-driven intake.
+
+The paper's pattern applied to LM serving: requests land on a pub/sub topic
+(the "landing zone"), a push subscription feeds engine instances (the
+"containers"), results publish to a response topic. Inside one engine:
+
+* a fixed-size slot array (the decode batch) over one shared KV cache,
+* per-request prefill (batch-1) writes its KV into a free slot,
+* one ``decode_step`` per tick advances every active slot together
+  (continuous batching — no head-of-line blocking on long generations),
+* finished slots free immediately and the backlog refills them.
+
+The engine is synchronous and deterministic (tests drive ``tick()``
+directly); ``PubSubFrontend`` adapts it to the event bus.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+__all__ = ["ContinuousBatchingEngine", "PubSubFrontend", "Request"]
+
+_ids = itertools.count(1)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    done: Callable | None = None  # callback(tokens)
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, cfg, params, *, batch_size: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self.cache = M.init_cache(cfg, batch_size, max_len)
+        self.pos = np.zeros(batch_size, np.int32)
+        self.active: list[Request | None] = [None] * batch_size
+        self.budget = np.zeros(batch_size, np.int32)
+        self.generated: dict[int, list[int]] = {}
+        self.backlog: deque[Request] = deque()
+        self.steps = 0
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos)
+        )
+        self._last_tok = np.zeros(batch_size, np.int32)
+
+    # ---- intake -----------------------------------------------------------
+    def submit(self, req: Request):
+        self.backlog.append(req)
+        self._fill_slots()
+
+    def _fill_slots(self):
+        for b in range(self.B):
+            if self.active[b] is None and self.backlog:
+                req = self.backlog.popleft()
+                self._prefill_into(b, req)
+
+    def _prefill_into(self, b: int, req: Request):
+        S = len(req.prompt)
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        cond = None
+        if self.cfg.family in ("vlm", "audio"):
+            cond = jnp.zeros((1, self.cfg.n_cross_tokens, self.cfg.d_model),
+                             self.cfg.dtype)
+        logits, cache1 = M.prefill(self.params, self.cfg, toks, cond=cond,
+                                   max_len=self.max_len)
+        # splice the request's caches into slot b
+        def splice(dst, src):
+            if dst.ndim >= 2 and src.shape[1] == 1 and dst.shape[1] == self.B:
+                return dst.at[:, b].set(src[:, 0].astype(dst.dtype))
+            if src.shape[0] == 1 and dst.shape[0] == self.B:  # (B, ...) states
+                return dst.at[b].set(src[0].astype(dst.dtype))
+            return dst
+        self.cache = jax.tree_util.tree_map(splice, self.cache, cache1)
+        tok = int(np.argmax(np.asarray(logits)[0]))
+        self.active[b] = req
+        self.pos[b] = S
+        self.budget[b] = req.max_new_tokens - 1
+        self.generated[req.req_id] = [tok]
+        self._last_tok[b] = tok
+
+    # ---- decode tick -----------------------------------------------------
+    def tick(self) -> int:
+        """One decode step over all active slots. Returns #active."""
+        if not any(r is not None for r in self.active):
+            self._fill_slots()
+            if not any(r is not None for r in self.active):
+                return 0
+        toks = jnp.asarray(self._last_tok, jnp.int32)[:, None]
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.steps += 1
+        for b, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[b] += 1
+            tok = int(nxt[b])
+            out = self.generated[req.req_id]
+            if self.budget[b] > 0 and (req.eos_id is None or tok != req.eos_id) \
+                    and self.pos[b] < self.max_len - 1:
+                out.append(tok)
+                self.budget[b] -= 1
+                self._last_tok[b] = tok
+            else:
+                self._finish(b, req)
+        self._fill_slots()
+        return sum(r is not None for r in self.active)
+
+    def _finish(self, b: int, req: Request):
+        tokens = self.generated.pop(req.req_id)
+        self.active[b] = None
+        if req.done:
+            req.done(tokens)
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        while (self.backlog or any(self.active)) and self.steps < max_steps:
+            self.tick()
+
+
+class PubSubFrontend:
+    """Event-bus adapter: request topic → engine, results → response topic."""
+
+    def __init__(self, engine: ContinuousBatchingEngine, topic, response_topic,
+                 name: str = "llm-serve"):
+        from repro.core.pubsub import Subscription
+
+        self.engine = engine
+        self.response_topic = response_topic
+        self.sub = Subscription(topic, name, self._on_message,
+                                ack_deadline=300.0)
+
+    def _on_message(self, msg, ctx):
+        data = msg.data
+
+        def done(tokens):
+            self.response_topic.publish(
+                {"request_id": data.get("request_id"), "tokens": tokens})
+            ctx.ack()
+
+        self.engine.submit(Request(
+            prompt=np.asarray(data["prompt"], np.int32),
+            max_new_tokens=int(data.get("max_new_tokens", 16)),
+            done=done,
+        ))

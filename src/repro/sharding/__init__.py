@@ -1,0 +1,160 @@
+"""Logical-axis sharding policy.
+
+One greedy, divisibility-aware policy maps logical axis names to mesh axes for
+*both* parameters and activations:
+
+* ``batch``  → ``('pod','data')`` (hierarchical data parallel)
+* ``vocab`` / ``mlp`` / ``tp`` / ``heads`` → ``'model'`` (tensor parallel)
+* ``kvseq`` → ``'model'`` (context-parallel KV caches for decode)
+* ``embed`` → ``'data'`` (FSDP / ZeRO-3 weight sharding — only claims 'data'
+  when no batch dim already did, so the same rule serves weights and
+  activations)
+* ``seq`` / ``head_dim`` → ``'model'`` *fallbacks*, used when a tensor has no
+  dim that can claim the model axis (e.g. gemma's 8 q-heads on a 16-way model
+  axis fall back to sequence sharding for activations and head_dim sharding
+  for weights).
+
+Each mesh axis is claimed at most once per tensor and only when it divides the
+dim size, so every arch in the zoo lowers on the same production mesh without
+per-arch special cases.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamDef, tree_defs
+
+__all__ = [
+    "spec_for",
+    "param_specs",
+    "named_sharding",
+    "set_mesh",
+    "current_mesh",
+    "constrain",
+    "batch_axes",
+]
+
+# logical axis -> ordered candidate mesh-axis tuples
+CANDIDATES: dict[str, list[tuple[str, ...]]] = {
+    "batch": [("pod", "data"), ("data",)],
+    "vocab": [("model",)],
+    "mlp": [("model",)],
+    "tp": [("model",)],
+    "heads": [("model",)],
+    "kvseq": [("model",)],
+    "embed": [("data",)],
+    "seq": [("model",)],
+    "head_dim": [("model",)],
+}
+
+# greedy claim order; earlier wins a contested mesh axis
+PRIORITY = [
+    "batch",
+    "vocab",
+    "mlp",
+    "tp",
+    "heads",
+    "kvseq",
+    "embed",
+    "seq",
+    "head_dim",
+]
+
+_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
+    "repro_mesh", default=None
+)
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: Mesh | None):
+    tok = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(tok)
+
+
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def spec_for(
+    shape: Sequence[int], logical: Sequence[str], mesh: Mesh,
+    policy: str = "train",
+) -> P:
+    """Resolve one tensor's logical axes to a PartitionSpec.
+
+    ``policy="serve_replicated"`` drops the 'embed'→data FSDP rule: at decode
+    the batch dim already owns 'data', so embed-sharded weights force a
+    per-token weight all-gather. Replicating weights across 'data' (keeping
+    TP over 'model') removes that collective entirely — used whenever the
+    TP-sharded weights fit the HBM budget (weight-stationary serving).
+    """
+    sizes = _axis_sizes(mesh)
+    assigned: dict[int, tuple[str, ...]] = {}
+    used: set[str] = set()
+    order = sorted(
+        range(len(shape)),
+        key=lambda i: PRIORITY.index(logical[i]) if logical[i] in PRIORITY else 99,
+    )
+    for i in order:
+        name = logical[i]
+        if policy == "serve_replicated" and name == "embed":
+            continue
+        for cand in CANDIDATES.get(name, []):
+            axes = tuple(a for a in cand if a in sizes)
+            if not axes or any(a in used for a in axes):
+                continue
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if total > 1 and shape[i] % total == 0:
+                assigned[i] = axes
+                used.update(axes)
+                break
+    parts = []
+    for i in range(len(shape)):
+        ax = assigned.get(i)
+        parts.append(ax if ax and len(ax) > 1 else (ax[0] if ax else None))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named_sharding(shape, logical, mesh: Mesh, policy: str = "train") -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical, mesh, policy))
+
+
+def param_specs(defs, mesh: Mesh, policy: str = "train"):
+    """NamedSharding tree mirroring a ParamDef tree."""
+    return jax.tree_util.tree_map(
+        lambda d: named_sharding(d.shape, d.logical, mesh, policy),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def constrain(x, *logical: str):
+    """with_sharding_constraint by logical axes; no-op outside a mesh context."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"rank mismatch: {logical} vs {x.shape}")
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(x.shape, logical, mesh)
+    )

@@ -1,0 +1,11 @@
+"""Training: optimizer, step builder, checkpointing."""
+from repro.train.optim import TrainConfig, adamw_update, init_opt, lr_at  # noqa: F401
+from repro.train.step import (  # noqa: F401
+    abstract_train_state,
+    batch_defs,
+    batch_shardings,
+    init_train_state,
+    make_train_step,
+    state_shardings,
+    train_state_defs,
+)

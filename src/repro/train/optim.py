@@ -1,0 +1,103 @@
+"""AdamW with fp32 moments over (possibly bf16) sharded parameters.
+
+The optimizer state mirrors the ParamDef tree, so the same logical-axis
+sharding rules cover params, moments, and gradients — a ZeRO-style layout
+falls out of the 'embed'→data FSDP rule with zero extra code.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+__all__ = ["TrainConfig", "opt_defs", "init_opt", "adamw_update", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatches: int = 1
+    # gradient compression across the slow (pod) axis: "none" | "int8_ef"
+    compress: str = "none"
+
+
+def _f32_like(d: ParamDef) -> ParamDef:
+    return dataclasses.replace(d, dtype=jnp.float32, init="zeros")
+
+
+def opt_defs(param_defs) -> dict:
+    """ParamDef tree for the optimizer state."""
+    mom = lambda: jax.tree_util.tree_map(
+        _f32_like, param_defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    return {
+        "m": mom(),
+        "v": mom(),
+        "count": ParamDef((), (), dtype=jnp.int32, init="zeros"),
+    }
+
+
+def init_opt(params) -> dict:
+    z = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return {"m": z(), "v": z(), "count": jnp.zeros((), jnp.int32)}
+
+
+def lr_at(tc: TrainConfig, step):
+    """Linear warmup → cosine decay to min_lr_frac·lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - tc.warmup_steps) / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return tc.lr * warm * (tc.min_lr_frac + (1 - tc.min_lr_frac) * cos)
+
+
+def global_norm(tree):
+    sq = jax.tree_util.tree_reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), tree, 0.0
+    )
+    return jnp.sqrt(sq)
+
+
+def adamw_update(tc: TrainConfig, params, grads, opt):
+    """One AdamW step. Returns (new_params, new_opt, metrics)."""
+    count = opt["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tc.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(tc, count)
+    bc1 = 1 - tc.b1 ** count.astype(jnp.float32)
+    bc2 = 1 - tc.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = tc.b1 * m + (1 - tc.b1) * g
+        v = tc.b2 * v + (1 - tc.b2) * jnp.square(g)
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + tc.eps)
+        step = step + tc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt["m"])
+    flat_v = treedef.flatten_up_to(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics

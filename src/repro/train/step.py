@@ -1,0 +1,122 @@
+"""Train-step builder: loss → grads (microbatched) → AdamW, fully sharded.
+
+``make_train_step`` returns (step_fn, state_shardings, batch_shardings) so the
+same builder serves the real trainer, the checkpoint tests, and the multi-pod
+dry-run (which lowers the returned function against ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.comms.compress import ef_compress, ef_init
+from repro.models import model as M
+from repro.models.params import ParamDef, abstractify, materialize
+from repro.train.optim import TrainConfig, adamw_update, init_opt, opt_defs
+
+__all__ = [
+    "train_state_defs",
+    "init_train_state",
+    "abstract_train_state",
+    "make_train_step",
+    "batch_defs",
+]
+
+
+def train_state_defs(cfg, tc: TrainConfig) -> dict:
+    pdefs = M.model_defs(cfg)
+    d = {"params": pdefs, "opt": opt_defs(pdefs)}
+    if tc.compress == "int8_ef":
+        d["ef"] = jax.tree_util.tree_map(
+            lambda x: ParamDef(x.shape, x.logical, jnp.float32, "zeros"),
+            pdefs, is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+    return d
+
+
+def init_train_state(cfg, tc: TrainConfig, key):
+    params = M.init_params(cfg, key)
+    state = {"params": params, "opt": init_opt(params)}
+    if tc.compress == "int8_ef":
+        state["ef"] = ef_init(params)
+    return state
+
+
+def abstract_train_state(cfg, tc: TrainConfig):
+    return abstractify(train_state_defs(cfg, tc))
+
+
+def batch_defs(cfg, global_batch: int, seq_len: int) -> dict:
+    d = {
+        "tokens": ParamDef((global_batch, seq_len), ("batch", "seq"),
+                           dtype=jnp.int32),
+        "labels": ParamDef((global_batch, seq_len), ("batch", "seq"),
+                           dtype=jnp.int32),
+    }
+    if cfg.family in ("vlm", "audio"):
+        d["cond"] = ParamDef(
+            (global_batch, cfg.n_cross_tokens, cfg.d_model),
+            ("batch", "", "embed"), dtype=cfg.dtype,
+        )
+    return d
+
+
+def make_train_step(cfg, tc: TrainConfig):
+    """Returns ``step(state, batch) -> (state, metrics)`` (pure, jit-able)."""
+
+    def loss_fn(params, mb):
+        return M.lm_loss(params, cfg, mb)
+
+    def grads_of(params, batch):
+        if tc.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        k = tc.microbatches
+        split = jax.tree_util.tree_map(
+            lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+        )
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            mb = jax.tree_util.tree_map(
+                lambda x: shd.constrain(
+                    x, *(("batch",) + ("",) * (x.ndim - 1))
+                ), mb
+            )
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g
+            )
+            return (loss_acc + loss, g_acc), None
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zero), split)
+        inv = 1.0 / k
+        return loss * inv, jax.tree_util.tree_map(lambda g: g * inv, grads)
+
+    def step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        new_state = dict(state)
+        if tc.compress == "int8_ef":
+            grads, new_state["ef"] = ef_compress(grads, state["ef"])
+        params, opt, metrics = adamw_update(
+            tc, state["params"], grads, state["opt"]
+        )
+        new_state["params"], new_state["opt"] = params, opt
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return step
+
+
+def state_shardings(cfg, tc: TrainConfig, mesh):
+    return shd.param_specs(train_state_defs(cfg, tc), mesh)
+
+
+def batch_shardings(cfg, global_batch: int, seq_len: int, mesh):
+    return shd.param_specs(batch_defs(cfg, global_batch, seq_len), mesh)

@@ -1,0 +1,331 @@
+"""JPEG baseline codec: JAX/Pallas transform stage + host entropy stage.
+
+Hardware-adaptation split (recorded in DESIGN.md): the per-tile transform math
+(color conversion, 8×8 DCT, quantization) is data-parallel → Pallas kernels;
+Huffman coding is a sequential, branchy bitstream operation with no MXU/VPU
+analogue → host numpy. This mirrors what the C++ ``wsi2dcm`` converter does
+(SIMD transform, scalar entropy coder).
+
+Produces/consumes real JFIF bytes (SOI/APP0/DQT/SOF0/DHT/SOS/EOI, standard
+Annex-K tables, 4:4:4, byte stuffing). The decoder exists for round-trip
+tests and PSNR measurement.
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from repro.kernels import dct8x8_quant, idct8x8_dequant, rgb2ycbcr
+from repro.kernels.ref import JPEG_CHROMA_Q, JPEG_LUMA_Q
+
+__all__ = ["encode_tile", "decode_tile", "psnr"]
+
+# --------------------------------------------------------------------------
+# Annex-K Huffman tables
+# --------------------------------------------------------------------------
+_DC_L_BITS = [0, 1, 5, 1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0]
+_DC_L_VALS = list(range(12))
+_DC_C_BITS = [0, 3, 1, 1, 1, 1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0]
+_DC_C_VALS = list(range(12))
+_AC_L_BITS = [0, 2, 1, 3, 3, 2, 4, 3, 5, 5, 4, 4, 0, 0, 1, 0x7D]
+_AC_L_VALS = [
+    0x01, 0x02, 0x03, 0x00, 0x04, 0x11, 0x05, 0x12, 0x21, 0x31, 0x41, 0x06,
+    0x13, 0x51, 0x61, 0x07, 0x22, 0x71, 0x14, 0x32, 0x81, 0x91, 0xA1, 0x08,
+    0x23, 0x42, 0xB1, 0xC1, 0x15, 0x52, 0xD1, 0xF0, 0x24, 0x33, 0x62, 0x72,
+    0x82, 0x09, 0x0A, 0x16, 0x17, 0x18, 0x19, 0x1A, 0x25, 0x26, 0x27, 0x28,
+    0x29, 0x2A, 0x34, 0x35, 0x36, 0x37, 0x38, 0x39, 0x3A, 0x43, 0x44, 0x45,
+    0x46, 0x47, 0x48, 0x49, 0x4A, 0x53, 0x54, 0x55, 0x56, 0x57, 0x58, 0x59,
+    0x5A, 0x63, 0x64, 0x65, 0x66, 0x67, 0x68, 0x69, 0x6A, 0x73, 0x74, 0x75,
+    0x76, 0x77, 0x78, 0x79, 0x7A, 0x83, 0x84, 0x85, 0x86, 0x87, 0x88, 0x89,
+    0x8A, 0x92, 0x93, 0x94, 0x95, 0x96, 0x97, 0x98, 0x99, 0x9A, 0xA2, 0xA3,
+    0xA4, 0xA5, 0xA6, 0xA7, 0xA8, 0xA9, 0xAA, 0xB2, 0xB3, 0xB4, 0xB5, 0xB6,
+    0xB7, 0xB8, 0xB9, 0xBA, 0xC2, 0xC3, 0xC4, 0xC5, 0xC6, 0xC7, 0xC8, 0xC9,
+    0xCA, 0xD2, 0xD3, 0xD4, 0xD5, 0xD6, 0xD7, 0xD8, 0xD9, 0xDA, 0xE1, 0xE2,
+    0xE3, 0xE4, 0xE5, 0xE6, 0xE7, 0xE8, 0xE9, 0xEA, 0xF1, 0xF2, 0xF3, 0xF4,
+    0xF5, 0xF6, 0xF7, 0xF8, 0xF9, 0xFA,
+]
+_AC_C_BITS = [0, 2, 1, 2, 4, 4, 3, 4, 7, 5, 4, 4, 0, 1, 2, 0x77]
+_AC_C_VALS = [
+    0x00, 0x01, 0x02, 0x03, 0x11, 0x04, 0x05, 0x21, 0x31, 0x06, 0x12, 0x41,
+    0x51, 0x07, 0x61, 0x71, 0x13, 0x22, 0x32, 0x81, 0x08, 0x14, 0x42, 0x91,
+    0xA1, 0xB1, 0xC1, 0x09, 0x23, 0x33, 0x52, 0xF0, 0x15, 0x62, 0x72, 0xD1,
+    0x0A, 0x16, 0x24, 0x34, 0xE1, 0x25, 0xF1, 0x17, 0x18, 0x19, 0x1A, 0x26,
+    0x27, 0x28, 0x29, 0x2A, 0x35, 0x36, 0x37, 0x38, 0x39, 0x3A, 0x43, 0x44,
+    0x45, 0x46, 0x47, 0x48, 0x49, 0x4A, 0x53, 0x54, 0x55, 0x56, 0x57, 0x58,
+    0x59, 0x5A, 0x63, 0x64, 0x65, 0x66, 0x67, 0x68, 0x69, 0x6A, 0x73, 0x74,
+    0x75, 0x76, 0x77, 0x78, 0x79, 0x7A, 0x82, 0x83, 0x84, 0x85, 0x86, 0x87,
+    0x88, 0x89, 0x8A, 0x92, 0x93, 0x94, 0x95, 0x96, 0x97, 0x98, 0x99, 0x9A,
+    0xA2, 0xA3, 0xA4, 0xA5, 0xA6, 0xA7, 0xA8, 0xA9, 0xAA, 0xB2, 0xB3, 0xB4,
+    0xB5, 0xB6, 0xB7, 0xB8, 0xB9, 0xBA, 0xC2, 0xC3, 0xC4, 0xC5, 0xC6, 0xC7,
+    0xC8, 0xC9, 0xCA, 0xD2, 0xD3, 0xD4, 0xD5, 0xD6, 0xD7, 0xD8, 0xD9, 0xDA,
+    0xE2, 0xE3, 0xE4, 0xE5, 0xE6, 0xE7, 0xE8, 0xE9, 0xEA, 0xF2, 0xF3, 0xF4,
+    0xF5, 0xF6, 0xF7, 0xF8, 0xF9, 0xFA,
+]
+
+_ZIGZAG = np.array([
+    0, 1, 8, 16, 9, 2, 3, 10, 17, 24, 32, 25, 18, 11, 4, 5,
+    12, 19, 26, 33, 40, 48, 41, 34, 27, 20, 13, 6, 7, 14, 21, 28,
+    35, 42, 49, 56, 57, 50, 43, 36, 29, 22, 15, 23, 30, 37, 44, 51,
+    58, 59, 52, 45, 38, 31, 39, 46, 53, 60, 61, 54, 47, 55, 62, 63,
+])
+
+
+def _build_codes(bits, vals):
+    """Canonical Huffman: symbol -> (code, length)."""
+    codes = {}
+    code = 0
+    k = 0
+    for ln in range(1, 17):
+        for _ in range(bits[ln - 1]):
+            codes[vals[k]] = (code, ln)
+            code += 1
+            k += 1
+        code <<= 1
+    return codes
+
+_ENC = {
+    ("dc", 0): _build_codes(_DC_L_BITS, _DC_L_VALS),
+    ("dc", 1): _build_codes(_DC_C_BITS, _DC_C_VALS),
+    ("ac", 0): _build_codes(_AC_L_BITS, _AC_L_VALS),
+    ("ac", 1): _build_codes(_AC_C_BITS, _AC_C_VALS),
+}
+_DEC = {
+    k: {v: sym for sym, v in table.items()} for k, table in _ENC.items()
+}
+
+
+class _BitWriter:
+    def __init__(self):
+        self.out = bytearray()
+        self.acc = 0
+        self.nbits = 0
+
+    def put(self, code: int, length: int):
+        self.acc = (self.acc << length) | (code & ((1 << length) - 1))
+        self.nbits += length
+        while self.nbits >= 8:
+            byte = (self.acc >> (self.nbits - 8)) & 0xFF
+            self.out.append(byte)
+            if byte == 0xFF:
+                self.out.append(0x00)  # byte stuffing
+            self.nbits -= 8
+        self.acc &= (1 << self.nbits) - 1
+
+    def flush(self):
+        if self.nbits:
+            pad = 8 - self.nbits
+            self.put((1 << pad) - 1, pad)
+        return bytes(self.out)
+
+
+class _BitReader:
+    def __init__(self, data: bytes):
+        self.data = data
+        self.pos = 0
+        self.acc = 0
+        self.nbits = 0
+
+    def _fill(self):
+        b = self.data[self.pos]
+        self.pos += 1
+        if b == 0xFF and self.pos < len(self.data) \
+                and self.data[self.pos] == 0x00:
+            self.pos += 1  # unstuff
+        self.acc = (self.acc << 8) | b
+        self.nbits += 8
+
+    def get(self, n: int) -> int:
+        while self.nbits < n:
+            self._fill()
+        v = (self.acc >> (self.nbits - n)) & ((1 << n) - 1)
+        self.nbits -= n
+        self.acc &= (1 << self.nbits) - 1
+        return v
+
+    def huff(self, table: dict) -> int:
+        code, ln = 0, 0
+        while ln < 17:
+            code = (code << 1) | self.get(1)
+            ln += 1
+            sym = table.get((code, ln))
+            if sym is not None:
+                return sym
+        raise ValueError("bad Huffman stream")
+
+
+def _category(v: int) -> int:
+    return int(v).bit_length() if v > 0 else int(-v).bit_length()
+
+
+def _encode_blocks(bw: _BitWriter, planes: list[np.ndarray]):
+    """planes: 3 × (H, W) int coefficient planes (blocks in place), 4:4:4."""
+    H, W = planes[0].shape
+    bh, bwid = H // 8, W // 8
+    zz = [
+        p.reshape(bh, 8, bwid, 8).transpose(0, 2, 1, 3)
+        .reshape(bh, bwid, 64)[:, :, _ZIGZAG]
+        for p in planes
+    ]
+    pred = [0, 0, 0]
+    for r in range(bh):
+        for c in range(bwid):
+            for comp in range(3):
+                tid = 0 if comp == 0 else 1
+                blk = zz[comp][r, c]
+                dc = int(blk[0])
+                diff = dc - pred[comp]
+                pred[comp] = dc
+                s = _category(diff)
+                code, ln = _ENC[("dc", tid)][s]
+                bw.put(code, ln)
+                if s:
+                    bw.put(diff if diff >= 0 else diff + (1 << s) - 1, s)
+                run = 0
+                ac = blk[1:]
+                nz = np.nonzero(ac)[0]
+                last = nz[-1] if len(nz) else -1
+                for i in range(last + 1):
+                    v = int(ac[i])
+                    if v == 0:
+                        run += 1
+                        continue
+                    while run > 15:
+                        code, ln = _ENC[("ac", tid)][0xF0]
+                        bw.put(code, ln)
+                        run -= 16
+                    s = _category(v)
+                    code, ln = _ENC[("ac", tid)][(run << 4) | s]
+                    bw.put(code, ln)
+                    bw.put(v if v >= 0 else v + (1 << s) - 1, s)
+                    run = 0
+                if last < 62:
+                    code, ln = _ENC[("ac", tid)][0x00]  # EOB
+                    bw.put(code, ln)
+
+
+def _decode_blocks(br: _BitReader, H: int, W: int) -> list[np.ndarray]:
+    bh, bwid = H // 8, W // 8
+    out = [np.zeros((bh, bwid, 64), np.int32) for _ in range(3)]
+    pred = [0, 0, 0]
+    inv_zz = np.argsort(_ZIGZAG)
+    for r in range(bh):
+        for c in range(bwid):
+            for comp in range(3):
+                tid = 0 if comp == 0 else 1
+                blk = np.zeros(64, np.int32)
+                s = br.huff(_DEC[("dc", tid)])
+                diff = 0
+                if s:
+                    bits = br.get(s)
+                    diff = bits if bits >= (1 << (s - 1)) else bits - (1 << s) + 1
+                pred[comp] += diff
+                blk[0] = pred[comp]
+                k = 1
+                while k < 64:
+                    sym = br.huff(_DEC[("ac", tid)])
+                    if sym == 0x00:
+                        break
+                    run, s = sym >> 4, sym & 0xF
+                    if sym == 0xF0:
+                        k += 16
+                        continue
+                    k += run
+                    bits = br.get(s)
+                    v = bits if bits >= (1 << (s - 1)) else bits - (1 << s) + 1
+                    blk[k] = v
+                    k += 1
+                out[comp][r, c] = blk
+    planes = []
+    for comp in range(3):
+        zz = out[comp][:, :, inv_zz].reshape(bh, bwid, 8, 8)
+        planes.append(zz.transpose(0, 2, 1, 3).reshape(H, W))
+    return planes
+
+
+# --------------------------------------------------------------------------
+# JFIF container
+# --------------------------------------------------------------------------
+def _marker(buf: bytearray, code: int, payload: bytes = b""):
+    buf += struct.pack(">BB", 0xFF, code)
+    if payload:
+        buf += struct.pack(">H", len(payload) + 2) + payload
+
+
+def _dqt_payload(tid: int, table: np.ndarray) -> bytes:
+    return bytes([tid]) + bytes(
+        int(v) for v in table.reshape(64)[_ZIGZAG]
+    )
+
+
+def _dht_payload(cls: int, tid: int, bits, vals) -> bytes:
+    return bytes([cls << 4 | tid]) + bytes(bits) + bytes(vals)
+
+
+def encode_tile(tile_rgb: np.ndarray) -> bytes:
+    """RGB (H, W, 3) uint8 → baseline JFIF bytes (4:4:4).
+
+    Transform stage runs on the JAX/Pallas kernels; entropy stage on host.
+    """
+    H, W, _ = tile_rgb.shape
+    assert H % 8 == 0 and W % 8 == 0
+    chw = np.transpose(tile_rgb, (2, 0, 1)).astype(np.float32)
+    ycc = np.asarray(rgb2ycbcr(chw))  # kernels (level-shifted)
+    qs = [JPEG_LUMA_Q, JPEG_CHROMA_Q, JPEG_CHROMA_Q]
+    planes = [np.asarray(dct8x8_quant(ycc[i], qs[i])) for i in range(3)]
+
+    buf = bytearray()
+    _marker(buf, 0xD8)  # SOI
+    _marker(buf, 0xE0, b"JFIF\x00\x01\x01\x00\x00\x01\x00\x01\x00\x00")
+    _marker(buf, 0xDB, _dqt_payload(0, JPEG_LUMA_Q))
+    _marker(buf, 0xDB, _dqt_payload(1, JPEG_CHROMA_Q))
+    sof = struct.pack(">BHHB", 8, H, W, 3)
+    for cid, tq in ((1, 0), (2, 1), (3, 1)):
+        sof += bytes([cid, 0x11, tq])  # h=v=1 (4:4:4)
+    _marker(buf, 0xC0, sof)
+    _marker(buf, 0xC4, _dht_payload(0, 0, _DC_L_BITS, _DC_L_VALS))
+    _marker(buf, 0xC4, _dht_payload(1, 0, _AC_L_BITS, _AC_L_VALS))
+    _marker(buf, 0xC4, _dht_payload(0, 1, _DC_C_BITS, _DC_C_VALS))
+    _marker(buf, 0xC4, _dht_payload(1, 1, _AC_C_BITS, _AC_C_VALS))
+    sos = bytes([3, 1, 0x00, 2, 0x11, 3, 0x11, 0, 63, 0])
+    _marker(buf, 0xDA, sos)
+    bw = _BitWriter()
+    _encode_blocks(bw, planes)
+    buf += bw.flush()
+    _marker(buf, 0xD9)  # EOI
+    return bytes(buf)
+
+
+def decode_tile(jpg: bytes) -> np.ndarray:
+    """Baseline JFIF (as produced by ``encode_tile``) → RGB (H, W, 3) uint8."""
+    pos = 0
+    H = W = None
+    data_start = None
+    while pos < len(jpg):
+        assert jpg[pos] == 0xFF, "marker expected"
+        code = jpg[pos + 1]
+        pos += 2
+        if code in (0xD8, 0xD9):
+            continue
+        ln = struct.unpack_from(">H", jpg, pos)[0]
+        if code == 0xC0:
+            _, H, W, _ = struct.unpack_from(">BHHB", jpg, pos + 2)
+        if code == 0xDA:
+            data_start = pos + ln
+            break
+        pos += ln
+    br = _BitReader(jpg[data_start : len(jpg) - 2])
+    planes = _decode_blocks(br, H, W)
+    qs = [JPEG_LUMA_Q, JPEG_CHROMA_Q, JPEG_CHROMA_Q]
+    rec = [np.asarray(idct8x8_dequant(planes[i], qs[i])) for i in range(3)]
+    y, cb, cr = rec[0] + 128.0, rec[1], rec[2]
+    r = y + 1.402 * cr
+    g = y - 0.344136 * cb - 0.714136 * cr
+    b = y + 1.772 * cb
+    rgb = np.stack([r, g, b], axis=-1)
+    return np.clip(np.round(rgb), 0, 255).astype(np.uint8)
+
+
+def psnr(a: np.ndarray, b: np.ndarray) -> float:
+    mse = np.mean((a.astype(np.float64) - b.astype(np.float64)) ** 2)
+    return float(10 * np.log10(255.0**2 / max(mse, 1e-12)))

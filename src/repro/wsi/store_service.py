@@ -1,0 +1,88 @@
+"""Enterprise DICOM store — the final arrow of the paper's Figure 1.
+
+A DICOMweb-shaped service over a bucket: STOW (store instances), QIDO
+(search studies/instances by UID / patient), WADO (retrieve). Converted
+studies land here from the conversion service; downstream consumers (the
+paper's "ML model subscriber", QA workflows) subscribe to the store's
+own instance-stored topic — demonstrating the extensibility claim that new
+services attach to existing topics without touching ingestion.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core.pubsub import Topic
+from repro.core.storage import Bucket
+from repro.wsi.convert import study_levels
+from repro.wsi.dicom import read_part10
+
+__all__ = ["DicomStoreService"]
+
+
+class DicomStoreService:
+    def __init__(self, bucket: Bucket, scheduler, metrics=None):
+        self.bucket = bucket
+        self.scheduler = scheduler
+        self.metrics = metrics or bucket.metrics
+        self.topic = Topic("dicom-instance-stored", scheduler, self.metrics)
+        self._index: dict[str, dict] = {}  # sop_uid -> metadata
+        self._studies: dict[str, list[str]] = {}  # study_uid -> [sop_uid]
+
+    # ---- STOW ---------------------------------------------------------------
+    def store_study_archive(self, key: str, archive: bytes) -> list[str]:
+        """Ingest a converted study tar (one .dcm per pyramid level)."""
+        stored = []
+        for name, blob in study_levels(archive).items():
+            if not name.endswith(".dcm"):
+                continue
+            stored.append(self.store_instance(f"{key}/{name}", blob))
+        return stored
+
+    def store_instance(self, key: str, part10: bytes) -> str:
+        ds, frames = read_part10(part10)
+        sop = ds.get_str(0x0008, 0x0018)
+        study = ds.get_str(0x0020, 0x000D)
+        meta = {
+            "sop_instance_uid": sop,
+            "sop_class_uid": ds.get_str(0x0008, 0x0016),
+            "study_uid": study,
+            "series_uid": ds.get_str(0x0020, 0x000E),
+            "patient_id": ds.get_str(0x0010, 0x0020),
+            "modality": ds.get_str(0x0008, 0x0060),
+            "rows": ds.get_int(0x0028, 0x0010),
+            "columns": ds.get_int(0x0028, 0x0011),
+            "frames": ds.get_int(0x0028, 0x0008),
+            "total_rows": ds.get_int(0x0048, 0x0007),
+            "total_cols": ds.get_int(0x0048, 0x0006),
+            "transfer_syntax": ds.get_str(0x0002, 0x0010),
+            "key": key,
+        }
+        self.bucket.put(key, part10, {"sop_instance_uid": sop})
+        self._index[sop] = meta
+        self._studies.setdefault(study, []).append(sop)
+        self.metrics.inc("dicomstore.instances")
+        self.topic.publish(meta)
+        return sop
+
+    # ---- QIDO ---------------------------------------------------------------
+    def search_studies(self, *, patient_id: str | None = None) -> list[str]:
+        out = []
+        for study, sops in self._studies.items():
+            meta = self._index[sops[0]]
+            if patient_id is None or meta["patient_id"] == patient_id:
+                out.append(study)
+        return sorted(out)
+
+    def search_instances(self, study_uid: str) -> list[dict]:
+        return [self._index[s] for s in self._studies.get(study_uid, [])]
+
+    # ---- WADO ----------------------------------------------------------------
+    def retrieve(self, sop_instance_uid: str) -> bytes:
+        meta = self._index.get(sop_instance_uid)
+        if meta is None:
+            raise KeyError(f"unknown SOP instance {sop_instance_uid}")
+        return self.bucket.get(meta["key"]).data
+
+    def retrieve_frame(self, sop_instance_uid: str, frame: int) -> bytes:
+        _, frames = read_part10(self.retrieve(sop_instance_uid))
+        return frames[frame]

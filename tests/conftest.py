@@ -1,0 +1,10 @@
+import os
+import sys
+from pathlib import Path
+
+# single-device CPU for tests (the dry-run manages its own device count)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

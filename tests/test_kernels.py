@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import dct8x8_quant, downsample2x2, idct8x8_dequant, rgb2ycbcr
+from repro.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("h,w", [(8, 128), (16, 256), (64, 384), (256, 256)])
+@pytest.mark.parametrize("dtype", [np.uint8, np.float32])
+def test_rgb2ycbcr_matches_ref(h, w, dtype):
+    img = jnp.asarray(RNG.integers(0, 256, size=(3, h, w)).astype(dtype))
+    out = rgb2ycbcr(img)
+    expect = ref.rgb2ycbcr_ref(img)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-3, rtol=1e-5)
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("c,h,w", [(3, 16, 256), (1, 32, 512), (4, 64, 256)])
+def test_downsample_matches_ref(c, h, w):
+    img = jnp.asarray(RNG.normal(0, 50, size=(c, h, w)).astype(np.float32))
+    out = downsample2x2(img)
+    expect = ref.downsample2x2_ref(img)
+    assert out.shape == (c, h // 2, w // 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("h,w", [(8, 128), (64, 256), (256, 384)])
+@pytest.mark.parametrize("table", ["luma", "chroma"])
+def test_dct_quant_matches_ref(h, w, table):
+    q = jnp.asarray(ref.JPEG_LUMA_Q if table == "luma" else ref.JPEG_CHROMA_Q)
+    plane = jnp.asarray(RNG.normal(0, 40, size=(h, w)).astype(np.float32))
+    out = dct8x8_quant(plane, q)
+    expect = ref.dct8x8_quant_ref(plane, q)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_unaligned_shapes_fall_back_to_ref():
+    img = jnp.asarray(RNG.integers(0, 255, size=(3, 20, 100)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(rgb2ycbcr(img)), np.asarray(ref.rgb2ycbcr_ref(img)),
+        atol=1e-3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(downsample2x2(img)),
+        np.asarray(ref.downsample2x2_ref(img)), atol=1e-4,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.integers(1, 4), bw=st.integers(1, 3),
+    scale=st.floats(1.0, 200.0),
+)
+def test_dct_idct_roundtrip_error_bounded(bh, bw, scale):
+    """Property: quantize→dequantize error is bounded by the quant step."""
+    h, w = 8 * bh, 128 * bw
+    plane = jnp.asarray(
+        np.random.default_rng(bh * 7 + bw).normal(0, scale, size=(h, w))
+        .astype(np.float32)
+    )
+    q = jnp.asarray(ref.JPEG_LUMA_Q)
+    coef = dct8x8_quant(plane, q)
+    rec = idct8x8_dequant(coef, q)
+    # max reconstruction error per coefficient is q/2; after orthonormal IDCT
+    # the per-pixel error is bounded by ||q||/2 (loose bound: max q × 4)
+    err = float(jnp.max(jnp.abs(rec - plane)))
+    assert err <= float(jnp.max(q)) * 4.0
+
+
+def test_dct_energy_preservation():
+    """Orthonormal DCT preserves energy (Parseval) before quantization."""
+    plane = jnp.asarray(RNG.normal(0, 30, size=(32, 128)).astype(np.float32))
+    ones = jnp.ones((8, 8), jnp.float32)  # quant table of 1s ≈ pure DCT
+    coef = dct8x8_quant(plane, ones).astype(jnp.float32)
+    e_sp = float(jnp.sum(plane**2))
+    e_fr = float(jnp.sum(coef**2))
+    assert abs(e_sp - e_fr) / e_sp < 0.01  # rounding-only deviation
+
+
+# --------------------------------------------------------------------------
+# fused RWKV6 wkv chunk kernel
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("S,chunk,sub", [(64, 32, 8), (128, 64, 16),
+                                         (256, 64, 16)])
+@pytest.mark.parametrize("decay_max", [2.0, 25.0])
+def test_wkv_chunk_kernel_matches_sequential(S, chunk, sub, decay_max):
+    from repro.kernels.wkv_chunk import wkv_chunk_pallas
+    from repro.models.rwkv6 import wkv_sequential
+
+    rng = np.random.default_rng(S + int(decay_max))
+    B, H, K = 2, 2, 64
+    r, k, v = (jnp.asarray(rng.normal(size=(B, S, H, K)), jnp.float32)
+               for _ in range(3))
+    logw = -jnp.asarray(rng.uniform(0.005, decay_max, (B, S, H, K)),
+                        jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, K)), jnp.float32)
+    ref, _ = wkv_sequential(r, k, v, logw, u,
+                            jnp.zeros((B, H, K, K), jnp.float32))
+    out = wkv_chunk_pallas(r, k, v, logw, u, chunk=chunk, sub=sub)
+    scale = float(jnp.abs(ref).max()) + 1.0
+    assert float(jnp.abs(ref - out).max()) / scale < 5e-4
+    assert not bool(jnp.isnan(out).any())

@@ -1,0 +1,58 @@
+"""The paper's quantitative claims, asserted against the calibrated simulation
+(EXPERIMENTS.md §Reproduction)."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.fig2_workflows import (autoscaling_time, parallel_time,
+                                       serial_time)
+from benchmarks.fig3_autoscaling import run as fig3_run
+
+
+def test_fig2_cold_start_loses_at_one_image():
+    tau = 90.0
+    assert autoscaling_time(1, tau) > serial_time(1, tau)
+    assert autoscaling_time(1, tau) > parallel_time(1, tau)
+
+
+def test_fig2_autoscaling_wins_at_batch_sizes():
+    tau = 90.0
+    for n in (10, 25, 50):
+        a = autoscaling_time(n, tau)
+        p = parallel_time(n, tau)
+        s = serial_time(n, tau)
+        assert a < p < s, (n, a, p, s)
+
+
+def test_fig2_autoscaling_is_flat_in_batch_size():
+    """The paper's plateau: once hot, completion time ~independent of n."""
+    tau = 90.0
+    times = [autoscaling_time(n, tau) for n in (10, 25, 50)]
+    assert max(times) - min(times) < 0.05 * min(times)
+
+
+def test_fig2_cold_start_tradeoff_with_warm_instances():
+    """Paper §Limitations: min_instances removes the cold start but costs
+    idle capacity — quantified."""
+    from repro.core import ConversionPipeline, SimScheduler
+
+    def one_image_latency(min_instances):
+        sched = SimScheduler()
+        pipe = ConversionPipeline(sched, service_time=90.0, cold_start=12.0,
+                                  min_instances=min_instances)
+        pipe.ingest("s.psv", b"x")
+        sched.run()
+        lat = pipe.metrics.timeseries("svc.wsi2dcm.latency")
+        return lat[-1][1]
+
+    assert one_image_latency(0) - one_image_latency(1) >= 11.0
+
+
+def test_fig3_ramp_plateau_decay():
+    minutes, pipe = fig3_run(n=50, tau=90.0)
+    values = [v for _, v in minutes]
+    assert max(values) >= 45  # ramp to ~one instance per slide
+    assert values[-1] == 0  # decay to zero (no idle cost)
+    assert pipe.done_count() == 50
+    assert pipe.service.cold_starts == 50

@@ -1,0 +1,156 @@
+"""Trainer: loss goes down, grad-accum equivalence, EF compression,
+checkpoint save/restore/atomicity/elasticity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms.compress import ef_compress, ef_init, int8_dequantize, int8_quantize
+from repro.configs import get_config
+from repro.data import TokenDataset, make_lm_batch
+from repro.models import model as M
+from repro.train import TrainConfig, init_train_state, make_train_step
+from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
+                                    restore_checkpoint, save_checkpoint)
+
+
+def _cfg():
+    return get_config("gemma-2b").reduced()
+
+
+def _jb(b):
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def test_loss_decreases_over_steps():
+    cfg = _cfg()
+    tc = TrainConfig(lr=3e-3, warmup_steps=2, total_steps=60, microbatches=1)
+    step = jax.jit(make_train_step(cfg, tc))
+    state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    ds = TokenDataset(cfg.vocab_size, 32, seed=0)
+    losses = []
+    for i in range(30):
+        state, m = step(state, _jb(ds.shard_batch(i % 4, 8)))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = _cfg()
+    key = jax.random.PRNGKey(1)
+    b = _jb(TokenDataset(cfg.vocab_size, 32, seed=1).shard_batch(0, 8))
+    tc1 = TrainConfig(microbatches=1)
+    tc4 = TrainConfig(microbatches=4)
+    s1 = init_train_state(cfg, tc1, key)
+    s4 = jax.tree_util.tree_map(lambda x: x, s1)
+    s1n, m1 = jax.jit(make_train_step(cfg, tc1))(s1, b)
+    s4n, m4 = jax.jit(make_train_step(cfg, tc4))(s4, b)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 2e-2
+    d = jax.tree_util.tree_map(
+        lambda a, c: float(jnp.abs(a.astype(jnp.float32)
+                                   - c.astype(jnp.float32)).max()),
+        s1n["params"], s4n["params"])
+    assert max(jax.tree_util.tree_leaves(d)) < 2e-2
+
+
+def test_int8_quantize_roundtrip_error():
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 3, size=(64, 64)),
+                    jnp.float32)
+    q, s = int8_quantize(x)
+    err = jnp.abs(int8_dequantize(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_compensates_bias():
+    """Sum of EF-compressed grads tracks the sum of true grads."""
+    rng = np.random.default_rng(3)
+    g_true = [jnp.asarray(rng.normal(0, 1, size=(32,)), jnp.float32)
+              for _ in range(50)]
+    ef = {"g": jnp.zeros((32,), jnp.float32)}
+    acc_c = jnp.zeros((32,))
+    acc_t = jnp.zeros((32,))
+    for g in g_true:
+        (cg,), ef_tree = ef_compress((g,), (ef["g"],))
+        ef["g"] = ef_tree[0]
+        acc_c = acc_c + cg
+        acc_t = acc_t + g
+    # residual is bounded by one quantization step, not O(n) drift
+    assert float(jnp.abs(acc_c - acc_t).max()) < 0.2
+
+
+def test_compressed_training_still_learns():
+    cfg = _cfg()
+    tc = TrainConfig(lr=3e-3, warmup_steps=2, total_steps=60,
+                     compress="int8_ef")
+    step = jax.jit(make_train_step(cfg, tc))
+    state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    assert "ef" in state
+    ds = TokenDataset(cfg.vocab_size, 32, seed=0)
+    losses = []
+    for i in range(25):
+        state, m = step(state, _jb(ds.shard_batch(i % 4, 8)))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.25
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = _cfg()
+    tc = TrainConfig()
+    state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    save_checkpoint(tmp_path, 7, state)
+    assert latest_step(tmp_path) == 7
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, step = restore_checkpoint(tmp_path, abstract)
+    assert step == 7
+    same = jax.tree_util.tree_map(
+        lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
+        state, restored)
+    assert all(jax.tree_util.tree_leaves(same))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    cfg = _cfg()
+    tc = TrainConfig()
+    state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(tmp_path, s, state, keep=2)
+    dirs = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert dirs == ["step_00000004", "step_00000005"]
+    assert latest_step(tmp_path) == 5
+
+
+def test_training_resumes_identically(tmp_path):
+    cfg = _cfg()
+    tc = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    step = jax.jit(make_train_step(cfg, tc))
+    ds = TokenDataset(cfg.vocab_size, 32, seed=0)
+    state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    for i in range(4):
+        state, _ = step(state, _jb(ds.shard_batch(i, 4)))
+    save_checkpoint(tmp_path, 4, state)
+    state_a = state
+    for i in range(4, 8):
+        state_a, ma = step(state_a, _jb(ds.shard_batch(i, 4)))
+    # "crash" and restart from disk
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    state_b, _ = restore_checkpoint(tmp_path, abstract)
+    for i in range(4, 8):
+        state_b, mb = step(state_b, _jb(ds.shard_batch(i, 4)))
+    assert abs(float(ma["loss"]) - float(mb["loss"])) < 1e-5
+
+
+def test_async_checkpointer(tmp_path):
+    cfg = _cfg()
+    tc = TrainConfig()
+    state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    ck = AsyncCheckpointer(tmp_path)
+    ck.save(11, state)
+    ck.wait()
+    assert latest_step(tmp_path) == 11
