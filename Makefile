@@ -1,0 +1,14 @@
+PYTHONPATH := src
+export PYTHONPATH
+
+.PHONY: test bench
+
+# tier-1 verify
+test:
+	python -m pytest -x -q
+
+# benchmark suite: paper figures + kernels + conversion hot path
+# (writes BENCH_*.json into the working directory)
+bench:
+	python -m benchmarks.run
+	python -m benchmarks.convert_bench

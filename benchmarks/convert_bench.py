@@ -1,0 +1,124 @@
+"""Conversion hot-path benchmark: whole-level batched vs per-tile encode.
+
+Measures, on a synthetic 1024² slide (16 tiles of 256²):
+
+- per-stage µs of the batched path — transform dispatch (one fused
+  ``jpeg_transform`` per level), host entropy coding (vectorized symbol
+  stream), DICOM Part-10 wrap;
+- the same 256×256 tile encode through both paths (the A/B the tentpole
+  targets: ≥3× on the batched path);
+- end-to-end slide conversion MPix/s, batched vs per-tile.
+
+On this CPU container the numbers are ref/interpret-mode numbers (the
+Pallas kernels lower natively only with ``REPRO_PALLAS_COMPILE=1``); the
+batched transform dispatches to the jnp oracle, the per-tile baseline runs
+the seed path unchanged. Byte-identity of the two JPEG streams is asserted
+as part of the run.
+
+Writes ``BENCH_convert.json`` into the working directory and prints a CSV
+summary (same format as the other benchmark modules).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.kernels import jpeg_transform
+from repro.wsi.convert import ConvertOptions, convert_wsi_to_dicom
+from repro.wsi.dicom import TS_JPEG_BASELINE, new_uid, write_part10
+from repro.wsi.jpeg import encode_coef_batch, encode_tile, encode_tiles_batch
+from repro.wsi.slide import PSVReader, SyntheticScanner
+
+SLIDE, TILE = 1024, 256
+
+
+def _time(fn, reps=5) -> float:
+    """Warm then average wall seconds per call."""
+    fn()
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def main() -> None:
+    psv = SyntheticScanner(seed=0).scan(SLIDE, SLIDE, TILE)
+    rd = PSVReader(psv)
+    bh, bw = rd.grid
+    tiles = np.stack([rd.read_tile(r, c)
+                      for r in range(bh) for c in range(bw)])
+    n_tiles = tiles.shape[0]
+    chw = np.transpose(tiles, (0, 3, 1, 2)).astype(np.float32)
+
+    # --- stage timings (whole level = all 16 tiles) --------------------
+    t_transform = _time(lambda: np.asarray(jpeg_transform(chw)))
+    coef = np.asarray(jpeg_transform(chw))
+    t_entropy = _time(lambda: encode_coef_batch(coef))
+    frames = encode_coef_batch(coef)
+    suid, seuid = new_uid(), new_uid()
+    t_wrap = _time(lambda: write_part10(
+        frames=frames, rows=TILE, cols=TILE, total_rows=SLIDE,
+        total_cols=SLIDE, transfer_syntax=TS_JPEG_BASELINE,
+        study_uid=suid, series_uid=seuid, instance_number=1,
+        metadata={0: "bench", 1: "level=0"}))
+
+    # --- the 256×256 tile encode A/B ----------------------------------
+    t_per_tile = _time(lambda: [encode_tile(t) for t in tiles], reps=3)
+    t_batched = _time(lambda: encode_tiles_batch(tiles), reps=3)
+    per_frames = [encode_tile(t) for t in tiles]
+    bat_frames = encode_tiles_batch(tiles)
+    identical = all(a == b for a, b in zip(per_frames, bat_frames))
+    assert identical, "batched JPEG bytes diverge from the per-tile path"
+    speedup = t_per_tile / t_batched
+
+    # --- end-to-end slide conversion ----------------------------------
+    mpix = SLIDE * SLIDE / 1e6
+    t_e2e_b = _time(lambda: convert_wsi_to_dicom(
+        psv, options=ConvertOptions(batched=True)), reps=3)
+    t_e2e_p = _time(lambda: convert_wsi_to_dicom(
+        psv, options=ConvertOptions(batched=False)), reps=3)
+
+    # dispatches per level: fused 1 vs 4 per tile (rgb2ycbcr + 3× dct)
+    result = {
+        "slide": {"hw": SLIDE, "tile": TILE, "tiles": n_tiles},
+        "stage_us": {
+            "transform_dispatch": t_transform * 1e6,
+            "entropy": t_entropy * 1e6,
+            "dicom_wrap": t_wrap * 1e6,
+        },
+        "tile_encode_256": {
+            "per_tile_us": t_per_tile / n_tiles * 1e6,
+            "batched_us": t_batched / n_tiles * 1e6,
+            "speedup": speedup,
+            "bytes_identical": identical,
+        },
+        "dispatches_per_level": {"per_tile": 4 * n_tiles, "batched": 1},
+        "end_to_end": {
+            "batched_s": t_e2e_b,
+            "per_tile_s": t_e2e_p,
+            "batched_mpix_s": mpix / t_e2e_b,
+            "per_tile_mpix_s": mpix / t_e2e_p,
+            "speedup": t_e2e_p / t_e2e_b,
+        },
+    }
+    with open("BENCH_convert.json", "w") as f:
+        json.dump(result, f, indent=2)
+
+    print("name,value,derived")
+    print(f"transform_dispatch_us,{t_transform*1e6:.0f},"
+          f"{n_tiles}tiles/1dispatch")
+    print(f"entropy_us,{t_entropy*1e6:.0f},vectorized")
+    print(f"dicom_wrap_us,{t_wrap*1e6:.0f},part10")
+    print(f"tile_encode_per_tile_us,{t_per_tile/n_tiles*1e6:.0f},baseline")
+    print(f"tile_encode_batched_us,{t_batched/n_tiles*1e6:.0f},"
+          f"speedup={speedup:.2f}x identical={identical}")
+    print(f"e2e_batched_mpix_s,{mpix/t_e2e_b:.2f},"
+          f"per_tile={mpix/t_e2e_p:.2f} speedup={t_e2e_p/t_e2e_b:.2f}x")
+    print("wrote BENCH_convert.json")
+
+
+if __name__ == "__main__":
+    main()

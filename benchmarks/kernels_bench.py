@@ -44,9 +44,11 @@ def main():
                  _time(jit_ref(lambda p: ref.dct8x8_quant_ref(p, q)), plane),
                  "256x256"))
     rows.append(("rgb2ycbcr_pallas_interp",
-                 _time(lambda x: rgb2ycbcr(x), tile), "interpret-mode"))
+                 _time(lambda x: rgb2ycbcr(x, impl="pallas"), tile),
+                 "interpret-mode"))
     rows.append(("dct_quant_pallas_interp",
-                 _time(lambda p: dct8x8_quant(p, q), plane), "interpret-mode"))
+                 _time(lambda p: dct8x8_quant(p, q, impl="pallas"), plane),
+                 "interpret-mode"))
 
     # fused rwkv6 wkv chunk kernel vs unfused chunked XLA path
     from repro.kernels.wkv_chunk import wkv_chunk_pallas

@@ -56,12 +56,16 @@ def main():
         lines.append(f"\ncells={len(cells)} ok={len(ok)} skip={n_skip} "
                      f"fail={n_fail}\n")
     report = "\n".join(lines)
+    ART.mkdir(parents=True, exist_ok=True)
     (ART / "roofline.md").write_text(report)
     print(report)
 
     # hillclimb candidates (single-pod, base archs only)
     ok = [d for d in load_cells("single")
           if d.get("ok") and "+" not in d["arch"]]
+    if not ok:
+        print("# no dry-run artifacts; run the dry-run sweep first")
+        return
     worst = min(ok, key=lambda d: d["mfu_bound"])
     coll = max(ok, key=lambda d: d["collective_s"] / max(d["bound_s"], 1e-12)
                * (d["dominant"] == "collective_s"))

@@ -1,0 +1,76 @@
+"""Whole-level fused JPEG transform (RGB→YCbCr→8×8 DCT→quant) Pallas kernel.
+
+One ``pallas_call`` transform-codes an entire pyramid level: the input is a
+``(N, 3, T, T)`` batch of RGB tiles and the output the ``(N, 3, T, T)`` int32
+quantized YCbCr DCT coefficients — the whole device side of the JPEG encoder
+in a single dispatch, versus the 4 per-tile dispatches of the unfused path
+(``rgb2ycbcr`` + 3× ``dct8x8_quant``). For an L-tile level that is a 4L→1
+dispatch reduction (see DESIGN.md, "Whole-level batched dispatch").
+
+Grid: ``(N, T/8, T/128)``. Each step loads one (1, 3, 8, 128) VMEM block —
+an 8×128 strip of all three channels of one tile (8×128 = one VREG tile per
+channel, 16 DCT blocks side by side) — converts to level-shifted YCbCr on
+the VPU, then runs the per-channel batched 8×8 DCT contractions on the MXU
+and fuses the divide-by-Q rounding. Both quantization tables ride along as a
+single (3, 8, 128) operand (luma, chroma, chroma — each Q tiled 16× along
+the lane dim) mapped to block (0, 0, 0) so they stay resident in VMEM across
+the whole grid.
+
+Bit-exactness contract: the per-channel math is expression-identical to the
+unfused ``rgb2ycbcr`` / ``dct8x8_quant`` kernels (same (16, 8, 8) einsum
+shape, shared ``ref.ycbcr_polynomials``), so the fused path produces the
+same int32 coefficients — the batched and per-tile JPEG byte streams match
+exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.dct8x8_quant import _dct_mat
+from repro.kernels.ref import ycbcr_polynomials
+
+__all__ = ["jpeg_transform_pallas"]
+
+_BH, _BW = 8, 128
+_NB = _BW // 8  # DCT blocks per VMEM strip
+
+
+def _kernel(x_ref, q_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)  # (3, 8, 128)
+    y, cb, cr = ycbcr_polynomials(x[0], x[1], x[2])
+    C = _dct_mat()
+    for ci, plane in enumerate((y, cb, cr)):
+        xb = plane.reshape(8, _NB, 8).transpose(1, 0, 2)  # (16, 8, 8)
+        yc = jnp.einsum("ij,bjk,lk->bil", C, xb, C,
+                        preferred_element_type=jnp.float32)
+        q = q_ref[ci].reshape(8, _NB, 8).transpose(1, 0, 2)
+        out = jnp.round(yc / q)
+        o_ref[0, ci] = out.transpose(1, 0, 2).reshape(8, _BW).astype(jnp.int32)
+
+
+def jpeg_transform_pallas(tiles, qluma, qchroma, *, interpret: bool = True):
+    """tiles: (N, 3, H, W) uint8/float RGB; q*: (8, 8) tables.
+
+    H % 8 == 0, W % 128 == 0. Returns (N, 3, H, W) int32 quantized YCbCr
+    DCT coefficients (blocks in place) in one ``pallas_call``.
+    """
+    N, C, H, W = tiles.shape
+    assert C == 3 and H % _BH == 0 and W % _BW == 0, tiles.shape
+    qwide = jnp.stack([
+        jnp.tile(jnp.asarray(q, jnp.float32), (1, _NB))
+        for q in (qluma, qchroma, qchroma)
+    ])  # (3, 8, 128): per-channel tables, resident across the grid
+    grid = (N, H // _BH, W // _BW)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3, _BH, _BW), lambda n, i, j: (n, 0, i, j)),
+            pl.BlockSpec((3, _BH, _BW), lambda n, i, j: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 3, _BH, _BW), lambda n, i, j: (n, 0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, 3, H, W), jnp.int32),
+        interpret=interpret,
+    )(tiles, qwide)

@@ -1,9 +1,23 @@
 """Public jit'd wrappers over the Pallas kernels.
 
-On the CPU container the kernels run in ``interpret=True`` (the kernel body
-executes in Python, validating the BlockSpec tiling); on a real TPU set
-``REPRO_PALLAS_COMPILE=1`` to lower them natively. ``impl="ref"`` falls back
-to the pure-jnp oracles (used for differential testing and odd shapes).
+``impl`` selects the backend per call:
+
+- ``"auto"`` (default) — the fastest *correct* implementation for this
+  environment: on a real TPU (``REPRO_PALLAS_COMPILE=1``) the Pallas kernel
+  lowered natively; otherwise the pure-jnp oracle. Unaligned shapes always
+  fall back to the oracle.
+- ``"ref"`` — the pure-jnp oracle, unconditionally.
+- ``"pallas"`` — the Pallas kernel, unconditionally; in this environment
+  that means ``interpret=True`` (the kernel body executes in Python,
+  validating the BlockSpec tiling). Used by the differential tests.
+
+Interpret mode is a correctness harness, not an execution path — it is
+orders of magnitude slower than the oracle and must never be what ``auto``
+picks. Keeping every ``auto`` caller on one backend per environment also
+preserves the byte-identity contract between the batched and per-tile JPEG
+paths (DESIGN.md, "Bit-exactness contract"): expression-identical float
+math compiled through *different* machinery (plain XLA vs the interpreter)
+can differ in the last ULP and flip a round-at-half quantization.
 """
 from __future__ import annotations
 
@@ -16,9 +30,11 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.dct8x8_quant import dct8x8_quant_pallas
 from repro.kernels.downsample2x2 import downsample2x2_pallas
+from repro.kernels.jpeg_transform import jpeg_transform_pallas
 from repro.kernels.rgb2ycbcr import rgb2ycbcr_pallas
 
-__all__ = ["rgb2ycbcr", "downsample2x2", "dct8x8_quant", "idct8x8_dequant"]
+__all__ = ["rgb2ycbcr", "downsample2x2", "dct8x8_quant", "idct8x8_dequant",
+           "jpeg_transform"]
 
 
 def _interpret() -> bool:
@@ -29,31 +45,57 @@ def _aligned(n: int, m: int) -> bool:
     return n % m == 0
 
 
+def _dispatch(impl: str, aligned: bool, pallas_fn, ref_fn):
+    """The shared impl policy (see module docstring)."""
+    if impl not in ("auto", "ref", "pallas"):
+        raise ValueError(f"impl must be 'auto', 'ref' or 'pallas': {impl!r}")
+    if impl == "pallas":
+        return pallas_fn(interpret=_interpret())
+    if impl == "ref" or not aligned or _interpret():
+        return ref_fn()
+    return pallas_fn(interpret=False)
+
+
 @partial(jax.jit, static_argnames=("impl",))
 def rgb2ycbcr(img, impl: str = "auto"):
     """(3, H, W) → (3, H, W) f32 level-shifted YCbCr."""
-    if impl == "ref" or (impl == "auto" and not (
-            _aligned(img.shape[1], 8) and _aligned(img.shape[2], 128))):
-        return ref.rgb2ycbcr_ref(img)
-    return rgb2ycbcr_pallas(img, interpret=_interpret())
+    return _dispatch(
+        impl, _aligned(img.shape[1], 8) and _aligned(img.shape[2], 128),
+        partial(rgb2ycbcr_pallas, img),
+        lambda: ref.rgb2ycbcr_ref(img))
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def downsample2x2(img, impl: str = "auto"):
     """(C, H, W) → (C, H//2, W//2) f32 box-filtered."""
-    if impl == "ref" or (impl == "auto" and not (
-            _aligned(img.shape[1], 16) and _aligned(img.shape[2], 256))):
-        return ref.downsample2x2_ref(img)
-    return downsample2x2_pallas(img, interpret=_interpret())
+    return _dispatch(
+        impl, _aligned(img.shape[1], 16) and _aligned(img.shape[2], 256),
+        partial(downsample2x2_pallas, img),
+        lambda: ref.downsample2x2_ref(img))
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def dct8x8_quant(plane, qtable, impl: str = "auto"):
     """(H, W) f32 → (H, W) i32 quantized DCT coefficients."""
-    if impl == "ref" or (impl == "auto" and not (
-            _aligned(plane.shape[0], 8) and _aligned(plane.shape[1], 128))):
-        return ref.dct8x8_quant_ref(plane, qtable)
-    return dct8x8_quant_pallas(plane, qtable, interpret=_interpret())
+    return _dispatch(
+        impl, _aligned(plane.shape[0], 8) and _aligned(plane.shape[1], 128),
+        partial(dct8x8_quant_pallas, plane, qtable),
+        lambda: ref.dct8x8_quant_ref(plane, qtable))
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def jpeg_transform(tiles, qluma=None, qchroma=None, impl: str = "auto"):
+    """(N, 3, T, T) RGB tiles → (N, 3, T, T) i32 quantized YCbCr DCT coefs.
+
+    The whole-level batched dispatch: one kernel launch transform-codes every
+    tile of a pyramid level (fused rgb2ycbcr + per-channel dct8x8_quant).
+    """
+    qluma = jnp.asarray(ref.JPEG_LUMA_Q) if qluma is None else qluma
+    qchroma = jnp.asarray(ref.JPEG_CHROMA_Q) if qchroma is None else qchroma
+    return _dispatch(
+        impl, _aligned(tiles.shape[2], 8) and _aligned(tiles.shape[3], 128),
+        partial(jpeg_transform_pallas, tiles, qluma, qchroma),
+        lambda: ref.jpeg_transform_ref(tiles, qluma, qchroma))
 
 
 @jax.jit

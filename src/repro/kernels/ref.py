@@ -1,12 +1,14 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
     "rgb2ycbcr_ref", "downsample2x2_ref", "dct8x8_quant_ref",
-    "idct8x8_dequant_ref", "dct_matrix", "JPEG_LUMA_Q", "JPEG_CHROMA_Q",
+    "idct8x8_dequant_ref", "jpeg_transform_ref", "ycbcr_polynomials",
+    "dct_matrix", "JPEG_LUMA_Q", "JPEG_CHROMA_Q",
 ]
 
 # ITU-T81 Annex K quantization tables (quality 50)
@@ -42,6 +44,21 @@ def dct_matrix() -> np.ndarray:
     return C.astype(np.float32)
 
 
+def ycbcr_polynomials(r, g, b):
+    """The single copy of the level-shifted JPEG YCbCr polynomials.
+
+    Every consumer — the Pallas kernel bodies (``rgb2ycbcr_pallas``,
+    ``jpeg_transform_pallas``) and this module's oracle — must call this
+    instead of restating the expressions: the batched/per-tile byte-identity
+    contract needs bit-identical floats, and a reassociated term in one
+    copy can drift the last ULP and flip a round-at-half quantization.
+    """
+    y = 0.299 * r + 0.587 * g + 0.114 * b - 128.0
+    cb = -0.168736 * r - 0.331264 * g + 0.5 * b
+    cr = 0.5 * r - 0.418688 * g - 0.081312 * b
+    return y, cb, cr
+
+
 def rgb2ycbcr_ref(img):
     """BT.601 full-range RGB→YCbCr with JPEG level shift on Y only after
     shift convention: returns float32 planes in [-128, 127].
@@ -50,11 +67,7 @@ def rgb2ycbcr_ref(img):
     (Y−128, Cb−128→centered, Cr centered).
     """
     r, g, b = (img[i].astype(jnp.float32) for i in range(3))
-    y = 0.299 * r + 0.587 * g + 0.114 * b
-    cb = -0.168736 * r - 0.331264 * g + 0.5 * b + 128.0
-    cr = 0.5 * r - 0.418688 * g - 0.081312 * b + 128.0
-    out = jnp.stack([y, cb, cr])
-    return out - 128.0  # JPEG level shift
+    return jnp.stack(list(ycbcr_polynomials(r, g, b)))
 
 
 def downsample2x2_ref(img):
@@ -80,6 +93,25 @@ def dct8x8_quant_ref(plane, qtable):
     y = jnp.einsum("ij,bcjk,lk->bcil", C, x, C)
     q = jnp.round(y / qtable[None, None]).astype(jnp.int32)
     return q.transpose(0, 2, 1, 3).reshape(H, W)
+
+
+def jpeg_transform_ref(tiles, qluma=None, qchroma=None):
+    """Oracle for the fused whole-level JPEG transform kernel.
+
+    tiles: (N, 3, H, W) RGB → (N, 3, H, W) int32 quantized YCbCr DCT
+    coefficients (rgb2ycbcr_ref ∘ dct8x8_quant_ref per channel, batched).
+    """
+    qluma = JPEG_LUMA_Q if qluma is None else qluma
+    qchroma = JPEG_CHROMA_Q if qchroma is None else qchroma
+    ycc = jax.vmap(rgb2ycbcr_ref)(tiles)  # (N, 3, H, W) f32 level-shifted
+    qs = (qluma, qchroma, qchroma)
+    planes = [
+        jax.vmap(lambda p, q=jnp.asarray(qs[c]): dct8x8_quant_ref(p, q))(
+            ycc[:, c]
+        )
+        for c in range(3)
+    ]
+    return jnp.stack(planes, axis=1)
 
 
 def idct8x8_dequant_ref(coef, qtable):

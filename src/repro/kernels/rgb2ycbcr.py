@@ -11,6 +11,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import ycbcr_polynomials
+
 __all__ = ["rgb2ycbcr_pallas"]
 
 _BH, _BW = 8, 128
@@ -18,10 +20,7 @@ _BH, _BW = 8, 128
 
 def _kernel(x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)  # (3, BH, BW)
-    r, g, b = x[0], x[1], x[2]
-    y = 0.299 * r + 0.587 * g + 0.114 * b - 128.0
-    cb = -0.168736 * r - 0.331264 * g + 0.5 * b
-    cr = 0.5 * r - 0.418688 * g - 0.081312 * b
+    y, cb, cr = ycbcr_polynomials(x[0], x[1], x[2])
     o_ref[0, :, :] = y
     o_ref[1, :, :] = cb
     o_ref[2, :, :] = cr

@@ -5,10 +5,26 @@ pyramid with the Pallas downsample kernel, transform-code every tile (Pallas
 DCT/quant + host Huffman), wrap each level in a DICOM Part-10 instance
 (TILED_FULL), and bundle the study as a tar archive.
 
-**Crash/resume**: a per-level manifest records finished levels; a converter
-restarted against the same manifest store skips completed levels (this backs
-the checkpoint/restart fault-tolerance tests — at-least-once delivery plus
-this idempotent resume gives effectively-once conversion).
+Two compute paths (see DESIGN.md, "Whole-level batched dispatch"):
+
+- **batched** (default): level 0 is uploaded to the device once; every
+  further level is produced by chaining ``downsample2x2`` on device (no
+  per-level host ``transpose``/``astype``/``clip`` round-trip), and all
+  tiles of a level are transform-coded by a single fused ``jpeg_transform``
+  dispatch followed by the vectorized host entropy coder.
+- **per-tile** (``ConvertOptions(batched=False)``): the original path — host
+  pyramid, ``[encode_tile(f) for f in frames]`` with 4 dispatches per tile.
+  Kept for A/B benchmarking; both paths emit byte-identical DICOM pixel
+  data.
+
+**Crash/resume**: ``ConvertOptions.manifest`` is the single store of
+finished-level DICOM bytes (level index → Part-10 bytes). A converter
+restarted against the same manifest skips completed levels (this backs the
+checkpoint/restart fault-tolerance tests — at-least-once delivery plus this
+idempotent resume gives effectively-once conversion). The study tar is
+assembled directly from the manifest, so finished-level bytes are stored
+exactly once; call ``ConvertOptions.clear_manifest()`` to release them once
+the study archive has been durably stored.
 """
 from __future__ import annotations
 
@@ -18,26 +34,39 @@ import tarfile
 
 import numpy as np
 
-from repro.kernels import downsample2x2
+import jax.numpy as jnp
+
+from repro.kernels import downsample2x2, jpeg_transform
 from repro.wsi.dicom import (TS_EXPLICIT_LE, TS_JPEG_BASELINE, new_uid,
                              write_part10)
-from repro.wsi.jpeg import encode_tile
+from repro.wsi.jpeg import encode_coef_batch, encode_tile
 from repro.wsi.slide import PSVReader
 
 __all__ = ["convert_wsi_to_dicom", "study_levels", "ConvertOptions"]
 
 
 class ConvertOptions:
+    """Converter knobs.
+
+    ``manifest`` maps level index (str) to the finished level's Part-10
+    bytes; it is both the resume checkpoint and the only copy of those bytes
+    held by the converter (the output tar is written from it directly).
+    """
+
     def __init__(self, *, min_level_size: int = 256, jpeg: bool = True,
-                 manifest: dict | None = None):
+                 manifest: dict | None = None, batched: bool = True):
         self.min_level_size = min_level_size
         self.jpeg = jpeg
-        # manifest: level index -> finished DICOM bytes (resume support)
+        self.batched = batched
         self.manifest = manifest if manifest is not None else {}
 
+    def clear_manifest(self) -> None:
+        """Drop finished-level bytes (call after the study tar is stored)."""
+        self.manifest.clear()
 
-def _level_frames(img: np.ndarray, tile: int) -> tuple[list[bytes], int, int]:
-    """Tile a (H, W, 3) level into row-major frames (JPEG or raw)."""
+
+def _level_frames(img: np.ndarray, tile: int) -> tuple[list[np.ndarray], int, int]:
+    """Tile a (H, W, 3) level into row-major frames."""
     H, W, _ = img.shape
     frames = []
     for r in range(H // tile):
@@ -45,6 +74,24 @@ def _level_frames(img: np.ndarray, tile: int) -> tuple[list[bytes], int, int]:
             frames.append(img[r * tile:(r + 1) * tile,
                               c * tile:(c + 1) * tile])
     return frames, H // tile, W // tile
+
+
+def _tile_batch(dev: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """(3, H, W) device level → (N, 3, tile, tile) row-major tile batch."""
+    _, H, W = dev.shape
+    bh, bw = H // tile, W // tile
+    if bh == 0 or bw == 0:
+        # level smaller than one tile: no full frames (matches the per-tile
+        # path, whose _level_frames loop body never runs)
+        return jnp.zeros((0, 3, tile, tile), dev.dtype)
+    return (dev[:, :bh * tile, :bw * tile].reshape(3, bh, tile, bw, tile)
+            .transpose(1, 3, 0, 2, 4).reshape(bh * bw, 3, tile, tile))
+
+
+def _encode_level_batched(dev: jnp.ndarray, tile: int) -> list[bytes]:
+    """All tiles of a device-resident level in one transform dispatch."""
+    coef = np.asarray(jpeg_transform(_tile_batch(dev, tile)))
+    return encode_coef_batch(coef)
 
 
 def convert_wsi_to_dicom(psv_bytes: bytes, metadata: dict | None = None,
@@ -61,22 +108,34 @@ def convert_wsi_to_dicom(psv_bytes: bytes, metadata: dict | None = None,
     for (r, c), t in rd.tiles():
         level[r * tile:(r + 1) * tile, c * tile:(c + 1) * tile] = t
 
-    dcm_files: dict[str, bytes] = {}
+    # batched path: the pyramid lives on device as float32 planes holding
+    # exact uint8 values (downsample output is re-quantized on device), so
+    # the transform input matches the per-tile uint8 path bit-for-bit
+    dev = jnp.asarray(np.transpose(level, (2, 0, 1)).astype(np.float32)) \
+        if opt.batched else None
+
     li = 0
     while True:
-        H, W = level.shape[:2]
-        if str(li) in opt.manifest:
-            dcm_files[f"level_{li}.dcm"] = opt.manifest[str(li)]
+        if opt.batched:
+            H, W = int(dev.shape[1]), int(dev.shape[2])
         else:
-            frames_rgb, _, _ = _level_frames(level, tile)
-            if opt.jpeg:
-                frames = [encode_tile(f) for f in frames_rgb]
+            H, W = level.shape[:2]
+        if str(li) not in opt.manifest:
+            if opt.jpeg and opt.batched:
+                frames = _encode_level_batched(dev, tile)
                 ts = TS_JPEG_BASELINE
             else:
-                frames = [np.ascontiguousarray(f).tobytes()
-                          for f in frames_rgb]
-                ts = TS_EXPLICIT_LE
-            dcm = write_part10(
+                if opt.batched:
+                    level = np.asarray(dev).transpose(1, 2, 0).astype(np.uint8)
+                frames_rgb, _, _ = _level_frames(level, tile)
+                if opt.jpeg:
+                    frames = [encode_tile(f) for f in frames_rgb]
+                    ts = TS_JPEG_BASELINE
+                else:
+                    frames = [np.ascontiguousarray(f).tobytes()
+                              for f in frames_rgb]
+                    ts = TS_EXPLICIT_LE
+            opt.manifest[str(li)] = write_part10(
                 frames=frames, rows=tile, cols=tile,
                 total_rows=H, total_cols=W, transfer_syntax=ts,
                 study_uid=study_uid, series_uid=series_uid,
@@ -84,35 +143,41 @@ def convert_wsi_to_dicom(psv_bytes: bytes, metadata: dict | None = None,
                 metadata={0: (metadata or {}).get("slide_id", "unknown"),
                           1: f"level={li}"},
             )
-            dcm_files[f"level_{li}.dcm"] = dcm
-            opt.manifest[str(li)] = dcm
         if min(H, W) // 2 < opt.min_level_size:
             break
-        chw = np.transpose(level, (2, 0, 1)).astype(np.float32)
-        down = np.asarray(downsample2x2(chw))
-        level = np.clip(np.round(np.transpose(down, (1, 2, 0))),
-                        0, 255).astype(np.uint8)
+        if opt.batched:
+            dev = jnp.clip(jnp.round(downsample2x2(dev)), 0, 255)
+        else:
+            chw = np.transpose(level, (2, 0, 1)).astype(np.float32)
+            down = np.asarray(downsample2x2(chw))
+            level = np.clip(np.round(np.transpose(down, (1, 2, 0))),
+                            0, 255).astype(np.uint8)
         li += 1
 
+    n_levels = li + 1
     buf = io.BytesIO()
     with tarfile.open(fileobj=buf, mode="w") as tar:
-        manifest = {"levels": len(dcm_files), "study_uid": study_uid,
+        manifest = {"levels": n_levels, "study_uid": study_uid,
                     "tile": tile}
         mb = json.dumps(manifest).encode()
         info = tarfile.TarInfo("study.json")
         info.size = len(mb)
         tar.addfile(info, io.BytesIO(mb))
-        for name, blob in sorted(dcm_files.items()):
-            info = tarfile.TarInfo(name)
+        for i in range(n_levels):
+            blob = opt.manifest[str(i)]
+            info = tarfile.TarInfo(f"level_{i}.dcm")
             info.size = len(blob)
             tar.addfile(info, io.BytesIO(blob))
     return buf.getvalue()
 
 
 def study_levels(study_tar: bytes) -> dict[str, bytes]:
-    """Unpack a converted study archive."""
+    """Unpack a converted study archive (non-file members are skipped)."""
     out = {}
     with tarfile.open(fileobj=io.BytesIO(study_tar)) as tar:
         for m in tar.getmembers():
-            out[m.name] = tar.extractfile(m).read()
+            f = tar.extractfile(m)
+            if f is None:  # directory / link member
+                continue
+            out[m.name] = f.read()
     return out

@@ -1,10 +1,20 @@
 """JPEG baseline codec: JAX/Pallas transform stage + host entropy stage.
 
-Hardware-adaptation split (recorded in DESIGN.md): the per-tile transform math
-(color conversion, 8×8 DCT, quantization) is data-parallel → Pallas kernels;
-Huffman coding is a sequential, branchy bitstream operation with no MXU/VPU
-analogue → host numpy. This mirrors what the C++ ``wsi2dcm`` converter does
-(SIMD transform, scalar entropy coder).
+Hardware-adaptation split (recorded in DESIGN.md, "Transform/entropy split"):
+the transform math (color conversion, 8×8 DCT, quantization) is data-parallel
+→ Pallas kernels; Huffman coding is a sequential, branchy bitstream operation
+with no MXU/VPU analogue → host numpy. This mirrors what the C++ ``wsi2dcm``
+converter does (SIMD transform, scalar entropy coder).
+
+Two encoder paths, byte-identical by construction (tested):
+
+- ``encode_tile``: the original per-tile path — 4 jitted dispatches per tile
+  (rgb2ycbcr + 3× dct8x8_quant) and a per-coefficient Python Huffman loop.
+  Kept as the A/B baseline for benchmarks.
+- ``encode_tiles_batch``: the whole-level batched path — one fused
+  ``jpeg_transform`` dispatch for every tile of a level, then a
+  numpy-vectorized symbol-stream entropy coder (``encode_coef_batch``) whose
+  cost scales with the number of emitted symbols, not coefficients.
 
 Produces/consumes real JFIF bytes (SOI/APP0/DQT/SOF0/DHT/SOS/EOI, standard
 Annex-K tables, 4:4:4, byte stuffing). The decoder exists for round-trip
@@ -16,10 +26,12 @@ import struct
 
 import numpy as np
 
-from repro.kernels import dct8x8_quant, idct8x8_dequant, rgb2ycbcr
+from repro.kernels import (dct8x8_quant, idct8x8_dequant, jpeg_transform,
+                           rgb2ycbcr)
 from repro.kernels.ref import JPEG_CHROMA_Q, JPEG_LUMA_Q
 
-__all__ = ["encode_tile", "decode_tile", "psnr"]
+__all__ = ["encode_tile", "encode_tiles_batch", "encode_coef_batch",
+           "decode_tile", "psnr"]
 
 # --------------------------------------------------------------------------
 # Annex-K Huffman tables
@@ -204,6 +216,208 @@ def _encode_blocks(bw: _BitWriter, planes: list[np.ndarray]):
                     bw.put(code, ln)
 
 
+# --------------------------------------------------------------------------
+# Vectorized entropy coder (the batched path)
+# --------------------------------------------------------------------------
+def _code_table_arrays(table: dict, nsym: int):
+    codes = np.zeros(nsym, np.uint32)
+    lens = np.zeros(nsym, np.int64)
+    for sym, (code, ln) in table.items():
+        codes[sym] = code
+        lens[sym] = ln
+    return codes, lens
+
+_DC_ARR = [_code_table_arrays(_ENC[("dc", t)], 12) for t in (0, 1)]
+_AC_ARR = [_code_table_arrays(_ENC[("ac", t)], 256) for t in (0, 1)]
+
+# entry-order key: ((block*3 + comp)*65 + slot)*8 + sub — slot is the zigzag
+# position (DC=0, AC z∈[1,63], EOB=64); sub orders ZRLs (0..2) before the
+# Huffman code (4) before the magnitude bits (5) of the same coefficient.
+_SUB_HUFF, _SUB_MAG = 4, 5
+
+
+def _category_vec(v: np.ndarray) -> np.ndarray:
+    """Vectorized bit_length(|v|): frexp's exponent is exact for integers."""
+    return np.frexp(np.abs(v).astype(np.float64))[1].astype(np.int64)
+
+
+def _magnitude_vec(v: np.ndarray, s: np.ndarray) -> np.ndarray:
+    """JPEG magnitude bits: v if v ≥ 0 else v + 2^s - 1 (fits in s bits)."""
+    return np.where(v >= 0, v, v + (1 << s) - 1).astype(np.uint32)
+
+
+def _comp_symbols(zz: np.ndarray, comp: int, nb_tile: int):
+    """One component's symbol stream: (key, code, length) int64/uint32/int64.
+
+    zz: (n_tiles · nb_tile, 64) zigzagged coefficients — all tiles of a
+    level concatenated, blocks in scan (row-major) order within each tile.
+    Emits exactly the symbols of the per-coefficient reference loop
+    (_encode_blocks) for every tile, each tagged with its bitstream-order
+    key (global block index keeps tiles contiguous and ordered; the DC
+    predictor resets at tile boundaries since each tile is its own scan).
+    """
+    tid = 0 if comp == 0 else 1
+    dc_codes, dc_lens = _DC_ARR[tid]
+    ac_codes, ac_lens = _AC_ARR[tid]
+    nb = zz.shape[0]
+    base = (np.arange(nb, dtype=np.int64) * 3 + comp) * 65  # key / 8, slot 0
+
+    keys, codes, lens = [], [], []
+
+    # DC: differential against the previous block of the same component,
+    # predictor reset to 0 on the first block of every tile
+    dc = zz[:, 0].astype(np.int64).reshape(-1, nb_tile)
+    prev = np.empty_like(dc)
+    prev[:, 0] = 0
+    prev[:, 1:] = dc[:, :-1]
+    diff = (dc - prev).reshape(-1)
+    s_dc = _category_vec(diff)
+    if (s_dc > 11).any():  # baseline DC table has categories 0..11
+        raise ValueError(
+            "DC difference out of range for the baseline Huffman table "
+            f"(max |diff|={int(np.abs(diff).max())})")
+    keys.append(base * 8 + 0)
+    codes.append(dc_codes[s_dc])
+    lens.append(dc_lens[s_dc])
+    has_mag = s_dc > 0
+    keys.append(base[has_mag] * 8 + 1)
+    codes.append(_magnitude_vec(diff[has_mag], s_dc[has_mag]))
+    lens.append(s_dc[has_mag])
+
+    # AC: run-length between nonzeros within each block
+    ac = zz[:, 1:]
+    bi, pz = np.nonzero(ac)  # ordered: block-major, position-minor
+    vals = ac[bi, pz].astype(np.int64)
+    first = np.ones(bi.size, bool)
+    first[1:] = bi[1:] != bi[:-1]
+    prevpos = np.concatenate(([0], pz[:-1]))
+    run = np.where(first, pz, pz - prevpos - 1).astype(np.int64)
+    nzrl, rem = run >> 4, run & 15
+    slot_key = ((bi * 3 + comp) * 65 + (pz + 1)) * 8
+
+    # ZRL (0xF0) emitted ⌊run/16⌋ times just before the coefficient's symbol
+    if nzrl.any():
+        rep = np.repeat(np.arange(bi.size), nzrl)
+        j = np.arange(rep.size) - np.repeat(np.cumsum(nzrl) - nzrl, nzrl)
+        keys.append(slot_key[rep] + j)
+        codes.append(np.full(rep.size, ac_codes[0xF0], np.uint32))
+        lens.append(np.full(rep.size, ac_lens[0xF0], np.int64))
+
+    s_ac = _category_vec(vals)
+    if (s_ac > 10).any():  # baseline AC table has categories 1..10; a
+        # larger category would alias into the run nibble of sym below
+        raise ValueError(
+            "AC coefficient magnitude out of range for the baseline "
+            f"Huffman table (max |v|={int(np.abs(vals).max())})")
+    sym = (rem << 4) | s_ac
+    ac_l = ac_lens[sym]
+    keys.append(slot_key + _SUB_HUFF)
+    codes.append(ac_codes[sym])
+    lens.append(ac_l)
+    keys.append(slot_key + _SUB_MAG)
+    codes.append(_magnitude_vec(vals, s_ac))
+    lens.append(s_ac)
+
+    # EOB for every block whose last nonzero AC sits before position 62
+    lastpos = np.full(nb, -1, np.int64)
+    lastpos[bi] = pz  # later (= larger pz) assignments win
+    eob = lastpos < 62
+    keys.append((base[eob] + 64) * 8)
+    codes.append(np.full(int(eob.sum()), ac_codes[0x00], np.uint32))
+    lens.append(np.full(int(eob.sum()), ac_lens[0x00], np.int64))
+
+    return (np.concatenate(keys), np.concatenate(codes).astype(np.uint32),
+            np.concatenate(lens))
+
+
+_ZZ_IDX_CACHE: dict[tuple[int, int], np.ndarray] = {}
+
+
+def _zigzag_gather_index(H: int, W: int) -> np.ndarray:
+    """Flat (H·W,) index map: plane → row-major 8×8 blocks in zigzag order."""
+    key = (H, W)
+    if key not in _ZZ_IDX_CACHE:
+        idx = np.arange(H * W).reshape(H // 8, 8, W // 8, 8)
+        idx = idx.transpose(0, 2, 1, 3).reshape(-1, 64)[:, _ZIGZAG]
+        _ZZ_IDX_CACHE[key] = np.ascontiguousarray(idx.reshape(-1))
+    return _ZZ_IDX_CACHE[key]
+
+
+def _stuff(packed: np.ndarray) -> bytes:
+    """0xFF byte stuffing over one tile's packed scan bytes."""
+    ff = packed == 0xFF
+    if ff.any():
+        out = np.zeros(packed.size + int(ff.sum()), np.uint8)
+        out[np.arange(packed.size) + (np.cumsum(ff) - ff)] = packed
+        packed = out  # gaps after each 0xFF stay 0x00 (stuffing)
+    return packed.tobytes()
+
+
+def _pack_bits_tiled(codes: np.ndarray, lens: np.ndarray,
+                     tile_ids: np.ndarray, n_tiles: int) -> list[bytes]:
+    """MSB-first bit-pack of all tiles' symbol streams in one pass.
+
+    Symbols are sorted, so each tile's run is contiguous. Every tile's
+    stream is flush-padded with 1-bits to a byte boundary (as
+    ``_BitWriter.flush``) inside one flat bit array, packed with a single
+    ``np.packbits``, then split per tile and 0xFF-stuffed.
+    """
+    totals = np.bincount(tile_ids, weights=lens,
+                         minlength=n_tiles).astype(np.int64)
+    pads = (-totals) % 8
+    padded = totals + pads
+    tile_start = np.cumsum(padded) - padded  # bit offset of each tile
+
+    cum = np.cumsum(lens) - lens  # global unpadded bit offsets
+    first = np.searchsorted(tile_ids, np.arange(n_tiles))
+    offs = tile_start[tile_ids] + (cum - cum[first][tile_ids])
+
+    # scatter each symbol into its ≤3 bytes: align the ≤16-bit code inside
+    # a 24-bit window starting at its byte, split into byte lanes, and sum
+    # per byte with bincount — bits are disjoint, so the sum is the OR
+    byte_pos = offs >> 3
+    shifted = (codes.astype(np.int64)
+               << (24 - (offs & 7) - lens)).astype(np.uint32)
+    n_bytes = int(padded.sum()) >> 3
+    pos = np.concatenate([byte_pos, byte_pos + 1, byte_pos + 2])
+    val = np.concatenate([(shifted >> 16) & 0xFF, (shifted >> 8) & 0xFF,
+                          shifted & 0xFF])
+    packed = np.bincount(pos, weights=val,
+                         minlength=n_bytes)[:n_bytes].astype(np.uint8)
+
+    byte_start = tile_start >> 3
+    byte_end = (tile_start + padded) >> 3
+    # flush: each tile's trailing pad bits are 1s (as _BitWriter.flush)
+    packed[byte_end - 1] |= ((1 << pads) - 1).astype(np.uint8)
+    return [_stuff(packed[byte_start[t]:byte_end[t]])
+            for t in range(n_tiles)]
+
+
+def _entropy_encode_batch(coef: np.ndarray) -> list[bytes]:
+    """Vectorized twin of ``_encode_blocks`` over a whole level at once.
+
+    coef: (N, 3, H, W) int coefficient planes (blocks in place, 4:4:4) →
+    N entropy-coded scan byte strings, each byte-identical to the
+    per-coefficient reference loop's output for that tile.
+    """
+    N, _, H, W = coef.shape
+    bh, bwid = H // 8, W // 8
+    nb_tile = bh * bwid
+    zz_idx = _zigzag_gather_index(H, W)
+    flat = coef.reshape(N, 3, H * W)
+    parts = []
+    for comp in range(3):
+        # one gather: (H, W) plane → (nb, 64) blocks already in zigzag order
+        zz = flat[:, comp].take(zz_idx, axis=1).reshape(N * nb_tile, 64)
+        parts.append(_comp_symbols(zz, comp, nb_tile))
+    keys = np.concatenate([p[0] for p in parts])
+    codes = np.concatenate([p[1] for p in parts])
+    lens = np.concatenate([p[2] for p in parts])
+    order = np.argsort(keys)  # keys are unique → scan order, tiles grouped
+    tile_ids = (keys[order] // (8 * 65 * 3)) // nb_tile
+    return _pack_bits_tiled(codes[order], lens[order], tile_ids, N)
+
+
 def _decode_blocks(br: _BitReader, H: int, W: int) -> list[np.ndarray]:
     bh, bwid = H // 8, W // 8
     out = [np.zeros((bh, bwid, 64), np.int32) for _ in range(3)]
@@ -262,18 +476,8 @@ def _dht_payload(cls: int, tid: int, bits, vals) -> bytes:
     return bytes([cls << 4 | tid]) + bytes(bits) + bytes(vals)
 
 
-def encode_tile(tile_rgb: np.ndarray) -> bytes:
-    """RGB (H, W, 3) uint8 → baseline JFIF bytes (4:4:4).
-
-    Transform stage runs on the JAX/Pallas kernels; entropy stage on host.
-    """
-    H, W, _ = tile_rgb.shape
-    assert H % 8 == 0 and W % 8 == 0
-    chw = np.transpose(tile_rgb, (2, 0, 1)).astype(np.float32)
-    ycc = np.asarray(rgb2ycbcr(chw))  # kernels (level-shifted)
-    qs = [JPEG_LUMA_Q, JPEG_CHROMA_Q, JPEG_CHROMA_Q]
-    planes = [np.asarray(dct8x8_quant(ycc[i], qs[i])) for i in range(3)]
-
+def _jfif_header(H: int, W: int) -> bytearray:
+    """SOI…SOS for a 4:4:4 baseline scan with the standard Annex-K tables."""
     buf = bytearray()
     _marker(buf, 0xD8)  # SOI
     _marker(buf, 0xE0, b"JFIF\x00\x01\x01\x00\x00\x01\x00\x01\x00\x00")
@@ -289,11 +493,58 @@ def encode_tile(tile_rgb: np.ndarray) -> bytes:
     _marker(buf, 0xC4, _dht_payload(1, 1, _AC_C_BITS, _AC_C_VALS))
     sos = bytes([3, 1, 0x00, 2, 0x11, 3, 0x11, 0, 63, 0])
     _marker(buf, 0xDA, sos)
+    return buf
+
+
+def encode_tile(tile_rgb: np.ndarray) -> bytes:
+    """RGB (H, W, 3) uint8 → baseline JFIF bytes (4:4:4).
+
+    The per-tile path: 4 jitted dispatches + the Python Huffman loop. Kept
+    as the A/B baseline for ``encode_tiles_batch`` (byte-identical output).
+    """
+    H, W, _ = tile_rgb.shape
+    assert H % 8 == 0 and W % 8 == 0
+    chw = np.transpose(tile_rgb, (2, 0, 1)).astype(np.float32)
+    ycc = np.asarray(rgb2ycbcr(chw))  # kernels (level-shifted)
+    qs = [JPEG_LUMA_Q, JPEG_CHROMA_Q, JPEG_CHROMA_Q]
+    planes = [np.asarray(dct8x8_quant(ycc[i], qs[i])) for i in range(3)]
+
+    buf = _jfif_header(H, W)
     bw = _BitWriter()
     _encode_blocks(bw, planes)
     buf += bw.flush()
     _marker(buf, 0xD9)  # EOI
     return bytes(buf)
+
+
+def encode_coef_batch(coef: np.ndarray) -> list[bytes]:
+    """(N, 3, H, W) int quantized YCbCr DCT coefficients → N JFIF tiles.
+
+    The host entropy stage of the batched path: vectorized symbol-stream
+    encoding (scales with emitted symbols, not coefficients).
+    """
+    coef = np.asarray(coef)
+    N, _, H, W = coef.shape
+    if N == 0:
+        return []
+    header = bytes(_jfif_header(H, W))
+    eoi = bytes((0xFF, 0xD9))
+    return [header + scan + eoi for scan in _entropy_encode_batch(coef)]
+
+
+def encode_tiles_batch(tiles_rgb: np.ndarray) -> list[bytes]:
+    """RGB (N, H, W, 3) uint8 → N baseline JFIF byte strings (4:4:4).
+
+    The whole-level batched path: all N tiles transform-coded in a single
+    fused ``jpeg_transform`` dispatch, then the vectorized entropy coder.
+    Output is byte-identical to ``[encode_tile(t) for t in tiles_rgb]``.
+    """
+    tiles = np.asarray(tiles_rgb)
+    N, H, W, _ = tiles.shape
+    assert H % 8 == 0 and W % 8 == 0
+    chw = np.transpose(tiles, (0, 3, 1, 2)).astype(np.float32)
+    coef = np.asarray(jpeg_transform(chw))
+    return encode_coef_batch(coef)
 
 
 def decode_tile(jpg: bytes) -> np.ndarray:

@@ -1,7 +1,7 @@
 """Pub/sub delivery semantics — the fault-tolerance invariants, property-based."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Metrics, SimScheduler, Subscription, Topic
 
