@@ -1,11 +1,19 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test bench
+.PHONY: test verify smoke bench
 
 # tier-1 verify
 test:
 	python -m pytest -x -q
+
+# same entry point, named the way the docs and CI refer to it
+verify: test
+
+# CPU byte-identity smoke: the conversion benchmark with --fast asserts
+# per-tile ≡ batched ≡ pipelined ≡ concurrent output bytes on small slides
+smoke:
+	python -m benchmarks.convert_bench --fast
 
 # benchmark suite: paper figures + kernels + conversion hot path
 # (writes BENCH_*.json into the working directory)

@@ -1,0 +1,64 @@
+"""Render the README benchmark tables from ``BENCH_convert.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_table [BENCH_convert.json]
+
+Prints GitHub-flavored markdown. The tables embedded in README.md are the
+output of this script over the checked-in ``BENCH_convert.json``; re-run
+``make bench`` followed by this module to refresh them after a change to
+the conversion hot path.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(bench: dict) -> str:
+    s = bench["slide"]
+    te = bench["tile_encode_256"]
+    e2e = bench["end_to_end"]
+    ms = bench["multi_slide"]
+    lines = [
+        f"Single slide ({s['hw']}×{s['hw']}, {s['tiles']} tiles of "
+        f"{s['tile']}²):",
+        "",
+        "| path | tile encode (µs/tile) | end-to-end (MPix/s) | vs sync |",
+        "|---|---|---|---|",
+        f"| per-tile (seed) | {te['per_tile_us']:,.0f} | "
+        f"{e2e['per_tile_mpix_s']:.2f} | "
+        f"{e2e['per_tile_mpix_s'] / e2e['sync_mpix_s']:.2f}× |",
+        f"| batched sync | {te['batched_us']:,.0f} | "
+        f"{e2e['sync_mpix_s']:.2f} | 1.00× |",
+        f"| pipelined | {te['batched_us']:,.0f} | "
+        f"{e2e['pipelined_mpix_s']:.2f} | "
+        f"{e2e['pipelined_speedup_vs_sync']:.2f}× |",
+        "",
+        f"Multi-slide batch ({ms['n_slides']} × {ms['hw']}² slides, "
+        f"{ms['max_instances']} instance × concurrency "
+        f"{ms['concurrency']}):",
+        "",
+        "| path | batch wall (s) | MPix/s | vs sync |",
+        "|---|---|---|---|",
+        f"| sync serial | {ms['sync_s']:.3f} | {ms['sync_mpix_s']:.2f} | "
+        "1.00× |",
+        f"| pipelined serial | {ms['pipelined_s']:.3f} | "
+        f"{ms['pipelined_mpix_s']:.2f} | {ms['pipelined_speedup']:.2f}× |",
+        f"| pipelined + concurrent (event-driven) | {ms['concurrent_s']:.3f}"
+        f" | {ms['concurrent_mpix_s']:.2f} | "
+        f"{ms['concurrent_speedup']:.2f}× |",
+        "",
+        f"All paths emit byte-identical study tars "
+        f"(asserted in the run: {ms['bytes_identical']}).",
+    ]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_convert.json"
+    with open(path) as f:
+        bench = json.load(f)
+    print(render(bench))
+
+
+if __name__ == "__main__":
+    main()

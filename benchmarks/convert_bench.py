@@ -1,30 +1,44 @@
-"""Conversion hot-path benchmark: whole-level batched vs per-tile encode.
+"""Conversion hot-path benchmark: batched/pipelined/concurrent A/Bs.
 
-Measures, on a synthetic 1024² slide (16 tiles of 256²):
+Single-slide section (synthetic 1024² slide, 16 tiles of 256²):
 
 - per-stage µs of the batched path — transform dispatch (one fused
   ``jpeg_transform`` per level), host entropy coding (vectorized symbol
   stream), DICOM Part-10 wrap;
-- the same 256×256 tile encode through both paths (the A/B the tentpole
-  targets: ≥3× on the batched path);
-- end-to-end slide conversion MPix/s, batched vs per-tile.
+- the same 256×256 tile encode through both paths (per-tile vs batched);
+- end-to-end slide conversion MPix/s: per-tile vs batched-sync vs pipelined.
+
+Multi-slide section (the paper's batch-conversion scenario):
+
+- **sync** — slides converted one after another, ``pipelined=False``;
+- **pipelined** — same serial order, the overlapping engine;
+- **pipelined + concurrent** — the batch pushed through the real
+  event-driven wiring (landing bucket → pub/sub → autoscaled service →
+  DICOM store) with ``concurrency`` parallel real conversions per instance.
+
+Byte-identity is asserted across all three: every study tar (UIDs seeded
+per slide) must be identical bit-for-bit, so the speedups cannot come from
+computing something different.
 
 On this CPU container the numbers are ref/interpret-mode numbers (the
 Pallas kernels lower natively only with ``REPRO_PALLAS_COMPILE=1``); the
 batched transform dispatches to the jnp oracle, the per-tile baseline runs
-the seed path unchanged. Byte-identity of the two JPEG streams is asserted
-as part of the run.
+the seed path unchanged.
 
 Writes ``BENCH_convert.json`` into the working directory and prints a CSV
-summary (same format as the other benchmark modules).
+summary (same format as the other benchmark modules). ``--fast`` shrinks
+sizes/reps for the CI smoke (same assertions, looser timings).
 """
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import time
 
 import numpy as np
 
+from repro.core import ConversionPipeline, RealScheduler
 from repro.kernels import jpeg_transform
 from repro.wsi.convert import ConvertOptions, convert_wsi_to_dicom
 from repro.wsi.dicom import TS_JPEG_BASELINE, new_uid, write_part10
@@ -44,8 +58,8 @@ def _time(fn, reps=5) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def main() -> None:
-    psv = SyntheticScanner(seed=0).scan(SLIDE, SLIDE, TILE)
+def _single_slide(slide: int, reps: int) -> dict:
+    psv = SyntheticScanner(seed=0).scan(slide, slide, TILE)
     rd = PSVReader(psv)
     bh, bw = rd.grid
     tiles = np.stack([rd.read_tile(r, c)
@@ -53,37 +67,55 @@ def main() -> None:
     n_tiles = tiles.shape[0]
     chw = np.transpose(tiles, (0, 3, 1, 2)).astype(np.float32)
 
-    # --- stage timings (whole level = all 16 tiles) --------------------
+    # --- stage timings (whole level = all tiles) -----------------------
     t_transform = _time(lambda: np.asarray(jpeg_transform(chw)))
     coef = np.asarray(jpeg_transform(chw))
     t_entropy = _time(lambda: encode_coef_batch(coef))
     frames = encode_coef_batch(coef)
     suid, seuid = new_uid(), new_uid()
     t_wrap = _time(lambda: write_part10(
-        frames=frames, rows=TILE, cols=TILE, total_rows=SLIDE,
-        total_cols=SLIDE, transfer_syntax=TS_JPEG_BASELINE,
+        frames=frames, rows=TILE, cols=TILE, total_rows=slide,
+        total_cols=slide, transfer_syntax=TS_JPEG_BASELINE,
         study_uid=suid, series_uid=seuid, instance_number=1,
         metadata={0: "bench", 1: "level=0"}))
 
     # --- the 256×256 tile encode A/B ----------------------------------
-    t_per_tile = _time(lambda: [encode_tile(t) for t in tiles], reps=3)
-    t_batched = _time(lambda: encode_tiles_batch(tiles), reps=3)
+    t_per_tile = _time(lambda: [encode_tile(t) for t in tiles], reps=reps)
+    t_batched = _time(lambda: encode_tiles_batch(tiles), reps=reps)
     per_frames = [encode_tile(t) for t in tiles]
     bat_frames = encode_tiles_batch(tiles)
     identical = all(a == b for a, b in zip(per_frames, bat_frames))
     assert identical, "batched JPEG bytes diverge from the per-tile path"
     speedup = t_per_tile / t_batched
 
-    # --- end-to-end slide conversion ----------------------------------
-    mpix = SLIDE * SLIDE / 1e6
-    t_e2e_b = _time(lambda: convert_wsi_to_dicom(
-        psv, options=ConvertOptions(batched=True)), reps=3)
-    t_e2e_p = _time(lambda: convert_wsi_to_dicom(
-        psv, options=ConvertOptions(batched=False)), reps=3)
+    # --- end-to-end slide conversion: per-tile / sync / pipelined ------
+    # (interleaved best-of rounds: container drift hits all variants alike)
+    mpix = slide * slide / 1e6
+    # fresh ConvertOptions per call: a reused one resumes from its manifest
+    variants = {"sync": dict(pipelined=False),
+                "pipe": dict(pipelined=True),
+                "per_tile": dict(batched=False)}
+    best = {k: float("inf") for k in variants}
+    for k, kw in variants.items():  # warm jit caches
+        convert_wsi_to_dicom(psv, options=ConvertOptions(**kw))
+    for _ in range(max(2, reps)):
+        for k, kw in variants.items():
+            t0 = time.perf_counter()
+            convert_wsi_to_dicom(psv, options=ConvertOptions(**kw))
+            best[k] = min(best[k], time.perf_counter() - t0)
+    t_e2e_sync, t_e2e_pipe, t_e2e_p = (best["sync"], best["pipe"],
+                                       best["per_tile"])
 
-    # dispatches per level: fused 1 vs 4 per tile (rgb2ycbcr + 3× dct)
-    result = {
-        "slide": {"hw": SLIDE, "tile": TILE, "tiles": n_tiles},
+    # e2e byte identity with shared UIDs: pipelined ≡ sync
+    uids = json.dumps([new_uid(), new_uid()])
+    e2e_sync = convert_wsi_to_dicom(psv, options=ConvertOptions(
+        pipelined=False, manifest={"uids": uids}))
+    e2e_pipe = convert_wsi_to_dicom(psv, options=ConvertOptions(
+        pipelined=True, manifest={"uids": uids}))
+    assert e2e_pipe == e2e_sync, "pipelined study tar diverges from sync"
+
+    return {
+        "slide": {"hw": slide, "tile": TILE, "tiles": n_tiles},
         "stage_us": {
             "transform_dispatch": t_transform * 1e6,
             "entropy": t_entropy * 1e6,
@@ -97,26 +129,140 @@ def main() -> None:
         },
         "dispatches_per_level": {"per_tile": 4 * n_tiles, "batched": 1},
         "end_to_end": {
-            "batched_s": t_e2e_b,
             "per_tile_s": t_e2e_p,
-            "batched_mpix_s": mpix / t_e2e_b,
+            "sync_s": t_e2e_sync,
+            "pipelined_s": t_e2e_pipe,
             "per_tile_mpix_s": mpix / t_e2e_p,
-            "speedup": t_e2e_p / t_e2e_b,
+            "sync_mpix_s": mpix / t_e2e_sync,
+            "pipelined_mpix_s": mpix / t_e2e_pipe,
+            "pipelined_speedup_vs_sync": t_e2e_sync / t_e2e_pipe,
+            "sync_speedup_vs_per_tile": t_e2e_p / t_e2e_sync,
+            "bytes_identical": True,
         },
     }
+
+
+def _multi_slide(n_slides: int, slide: int, reps: int,
+                 concurrency: int | None = None,
+                 instances: int = 1) -> dict:
+    """The batch A/B: serial sync vs serial pipelined vs event-driven
+    concurrent, all byte-identical (per-slide seeded UIDs).
+
+    ``concurrency`` defaults to ``cores // 2`` (min 1): each pipelined
+    conversion already keeps ~2 threads busy (XLA pool + host entropy
+    coder), so running more conversions than that in parallel just
+    thrashes the cores and the GIL. The chosen value is recorded in the
+    JSON so the A/B is interpretable across machines.
+    """
+    if concurrency is None:
+        concurrency = max(1, (os.cpu_count() or 2) // 2)
+    slides = {f"slides/s{i}.psv":
+              SyntheticScanner(seed=100 + i).scan(slide, slide, TILE)
+              for i in range(n_slides)}
+    uids = {k: json.dumps([new_uid(), new_uid()]) for k in slides}
+
+    def convert_one(key: str, data: bytes, pipelined: bool) -> bytes:
+        opt = ConvertOptions(pipelined=pipelined,
+                             manifest={"uids": uids[key]})
+        return convert_wsi_to_dicom(data, {"slide_id": key}, options=opt)
+
+    # warm the jit caches once so all variants time steady-state work
+    k0, v0 = next(iter(slides.items()))
+    convert_one(k0, v0, False)
+    convert_one(k0, v0, True)
+
+    def run_serial(pipelined: bool) -> tuple[float, dict]:
+        t0 = time.perf_counter()
+        outs = {k: convert_one(k, v, pipelined) for k, v in slides.items()}
+        return time.perf_counter() - t0, outs
+
+    def run_concurrent() -> tuple[float, dict]:
+        sched = RealScheduler(workers=2 * instances * concurrency)
+        pipe = ConversionPipeline(
+            sched,
+            convert=lambda data, meta: convert_one(meta["slide_id"], data,
+                                                   True),
+            max_instances=instances, concurrency=concurrency,
+            cold_start=0.0, scale_down_delay=5.0,
+        )
+        # time until the last study is stored — not until the service has
+        # also scaled back to zero (idle wind-down is not batch runtime)
+        t0 = time.perf_counter()
+        outs = pipe.run_batch(slides)
+        dt = time.perf_counter() - t0
+        sched.shutdown()
+        return dt, outs
+
+    # interleave the variants across rounds so drift on a shared container
+    # hits all three equally; keep the best round of each (same number of
+    # rounds per variant — an uneven best-of would bias the minima)
+    t_sync = t_pipe = t_conc = float("inf")
+    outs_sync = outs_pipe = outs_conc = None
+    for _ in range(reps):
+        dt, outs_sync = run_serial(False)
+        t_sync = min(t_sync, dt)
+        dt, outs_pipe = run_serial(True)
+        t_pipe = min(t_pipe, dt)
+        dt, outs_conc = run_concurrent()
+        t_conc = min(t_conc, dt)
+    assert outs_pipe == outs_sync, "pipelined batch diverges from sync"
+    assert outs_conc == outs_sync, "concurrent batch diverges from sync"
+
+    mpix = n_slides * slide * slide / 1e6
+    return {
+        "n_slides": n_slides,
+        "hw": slide,
+        "concurrency": concurrency,
+        "max_instances": instances,
+        "sync_s": t_sync,
+        "pipelined_s": t_pipe,
+        "concurrent_s": t_conc,
+        "sync_mpix_s": mpix / t_sync,
+        "pipelined_mpix_s": mpix / t_pipe,
+        "concurrent_mpix_s": mpix / t_conc,
+        "pipelined_speedup": t_sync / t_pipe,
+        "concurrent_speedup": t_sync / t_conc,
+        "bytes_identical": True,
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: smaller slides, fewer reps, same "
+                         "byte-identity assertions")
+    args = ap.parse_args(argv)
+    slide = 512 if args.fast else SLIDE
+    reps = 1 if args.fast else 3
+    n_slides = 3 if args.fast else 4
+
+    single = _single_slide(slide, reps)
+    multi = _multi_slide(n_slides, slide, reps)
+    result = {**single, "multi_slide": multi}
     with open("BENCH_convert.json", "w") as f:
         json.dump(result, f, indent=2)
 
+    st, te, e2e, ms = (result["stage_us"], result["tile_encode_256"],
+                       result["end_to_end"], multi)
+    n_tiles = result["slide"]["tiles"]
     print("name,value,derived")
-    print(f"transform_dispatch_us,{t_transform*1e6:.0f},"
+    print(f"transform_dispatch_us,{st['transform_dispatch']:.0f},"
           f"{n_tiles}tiles/1dispatch")
-    print(f"entropy_us,{t_entropy*1e6:.0f},vectorized")
-    print(f"dicom_wrap_us,{t_wrap*1e6:.0f},part10")
-    print(f"tile_encode_per_tile_us,{t_per_tile/n_tiles*1e6:.0f},baseline")
-    print(f"tile_encode_batched_us,{t_batched/n_tiles*1e6:.0f},"
-          f"speedup={speedup:.2f}x identical={identical}")
-    print(f"e2e_batched_mpix_s,{mpix/t_e2e_b:.2f},"
-          f"per_tile={mpix/t_e2e_p:.2f} speedup={t_e2e_p/t_e2e_b:.2f}x")
+    print(f"entropy_us,{st['entropy']:.0f},vectorized")
+    print(f"dicom_wrap_us,{st['dicom_wrap']:.0f},part10")
+    print(f"tile_encode_per_tile_us,{te['per_tile_us']:.0f},baseline")
+    print(f"tile_encode_batched_us,{te['batched_us']:.0f},"
+          f"speedup={te['speedup']:.2f}x identical={te['bytes_identical']}")
+    print(f"e2e_sync_mpix_s,{e2e['sync_mpix_s']:.2f},"
+          f"per_tile={e2e['per_tile_mpix_s']:.2f}")
+    print(f"e2e_pipelined_mpix_s,{e2e['pipelined_mpix_s']:.2f},"
+          f"speedup_vs_sync={e2e['pipelined_speedup_vs_sync']:.2f}x")
+    print(f"batch_sync_s,{ms['sync_s']:.3f},{ms['n_slides']}x{ms['hw']}²")
+    print(f"batch_pipelined_s,{ms['pipelined_s']:.3f},"
+          f"speedup={ms['pipelined_speedup']:.2f}x")
+    print(f"batch_concurrent_s,{ms['concurrent_s']:.3f},"
+          f"speedup={ms['concurrent_speedup']:.2f}x "
+          f"identical={ms['bytes_identical']}")
     print("wrote BENCH_convert.json")
 
 

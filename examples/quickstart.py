@@ -4,9 +4,15 @@
 
 Scans a synthetic proprietary-format (PSV) slide, drops it in the landing
 bucket, and lets the event chain do the rest: object-creation notification →
-pub/sub topic → push subscription → autoscaled converter (JAX/Pallas
-transform + host Huffman) → DICOM store. Then reads the DICOM study back and
-verifies it.
+pub/sub topic → push subscription → autoscaled converter (the pipelined
+JAX/Pallas transform + host Huffman engine) → DICOM store. Then reads the
+DICOM study back and verifies it.
+
+Expected output: the PSV byte count, the converted study in the DICOM
+store (one .dcm per pyramid level — a 512² slide yields 2 levels), each
+level's dimensions/frame count/transfer syntax, a level-0 PSNR in the
+30–40 dB range against the scanner's pixels, the pipeline's metric
+counters, and a final "quickstart OK".
 """
 import sys
 from pathlib import Path

@@ -19,11 +19,22 @@ of the paper). Work is supplied by a ``handler``:
   completion is scheduled (deterministic discrete-event execution),
 * real mode — ``handler(request) -> None`` does the actual work (e.g. runs
   the JAX WSI→DICOM conversion) and its wall time is the service time.
+
+**Real-mode concurrency**: every accepted request is dispatched to the
+scheduler's worker pool, so one instance really does run up to
+``concurrency`` handler calls in parallel threads (the converter's heavy
+regions — transform dispatch, numpy entropy coding, zlib — release the
+GIL). All service state (instance table, request queue, active counts) is
+guarded by one re-entrant lock; real-work handlers always run outside it
+(sim-mode service-time models are called inline — sim execution is
+single-threaded), and ``done`` callbacks are invoked outside it too, so
+the pub/sub layer can re-enter ``receive`` without lock-ordering hazards.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from collections import deque
 from typing import Callable
 
@@ -82,12 +93,15 @@ class AutoscalingService:
         self.instances: dict[int, Instance] = {}
         self.queue: deque[_Request] = deque()
         self._iid = itertools.count(1)
+        self._lock = threading.RLock()
         self.cold_starts = 0
-        for _ in range(min_instances):
-            self._start_instance(warm=True)
+        with self._lock:
+            for _ in range(min_instances):
+                self._start_instance(warm=True)
 
     # ---- instance lifecycle ------------------------------------------------
     def _start_instance(self, warm: bool = False) -> Instance:
+        # lock held
         iid = next(self._iid)
         delay = 0.0 if warm else self.cold_start
         inst = Instance(iid, self.scheduler.now() + delay)
@@ -100,46 +114,51 @@ class AutoscalingService:
         return inst
 
     def _instance_ready(self, inst: Instance):
-        if inst.state != "starting" or inst.dead:
-            return
-        inst.state = "idle"
-        inst.idle_since = self.scheduler.now()
-        self._drain()
-        self._schedule_scale_down(inst)
+        with self._lock:
+            if inst.state != "starting" or inst.dead:
+                return
+            inst.state = "idle"
+            inst.idle_since = self.scheduler.now()
+            self._drain()
+            self._schedule_scale_down(inst)
 
     def _schedule_scale_down(self, inst: Instance):
         self.scheduler.schedule(self.scale_down_delay + 1e-9,
                                 self._maybe_stop, inst)
 
     def _maybe_stop(self, inst: Instance):
-        alive = [i for i in self.instances.values()
-                 if i.state in ("starting", "idle", "busy")]
-        if (
-            inst.state == "idle"
-            and self.scheduler.now() - inst.idle_since >= self.scale_down_delay
-            and len(alive) > self.min_instances
-        ):
-            inst.state = "stopped"
-            del self.instances[inst.iid]
-            self.metrics.inc(f"svc.{self.name}.stopped")
-            self._record_count()
-        elif inst.state == "idle":
-            self._schedule_scale_down(inst)
+        with self._lock:
+            alive = [i for i in self.instances.values()
+                     if i.state in ("starting", "idle", "busy")]
+            if (
+                inst.state == "idle"
+                and self.scheduler.now() - inst.idle_since
+                >= self.scale_down_delay
+                and len(alive) > self.min_instances
+            ):
+                inst.state = "stopped"
+                del self.instances[inst.iid]
+                self.metrics.inc(f"svc.{self.name}.stopped")
+                self._record_count()
+            elif inst.state == "idle":
+                self._schedule_scale_down(inst)
 
     def kill_instance(self, iid: int | None = None):
         """Fault injection: abruptly kill an instance (in-flight work lost)."""
-        pool = [i for i in self.instances.values() if i.state != "stopped"]
-        if not pool:
-            return None
-        inst = self.instances.get(iid) if iid else pool[-1]
-        if inst is None:
-            return None
-        inst.dead = True
-        inst.state = "stopped"
-        self.instances.pop(inst.iid, None)
-        self.metrics.inc(f"svc.{self.name}.killed")
-        self._record_count()
-        return inst.iid
+        with self._lock:
+            pool = [i for i in self.instances.values()
+                    if i.state != "stopped"]
+            if not pool:
+                return None
+            inst = self.instances.get(iid) if iid else pool[-1]
+            if inst is None:
+                return None
+            inst.dead = True
+            inst.state = "stopped"
+            self.instances.pop(inst.iid, None)
+            self.metrics.inc(f"svc.{self.name}.killed")
+            self._record_count()
+            return inst.iid
 
     def _record_count(self):
         self.metrics.record(
@@ -151,11 +170,13 @@ class AutoscalingService:
     def receive(self, payload, done: Callable[[bool], None]):
         req = _Request(payload, done, self.scheduler.now())
         self.metrics.inc(f"svc.{self.name}.requests")
-        self.queue.append(req)
-        self._drain()
-        self._maybe_scale_up()
+        with self._lock:
+            self.queue.append(req)
+            self._drain()
+            self._maybe_scale_up()
 
     def _maybe_scale_up(self):
+        # lock held
         alive = [i for i in self.instances.values() if i.state != "stopped"]
         capacity = sum(
             self.concurrency - i.active for i in alive if not i.dead
@@ -163,10 +184,12 @@ class AutoscalingService:
         need = len(self.queue) - capacity
         while need > 0 and len(alive) < self.max_instances:
             self._start_instance()
-            alive = [i for i in self.instances.values() if i.state != "stopped"]
+            alive = [i for i in self.instances.values()
+                     if i.state != "stopped"]
             need -= self.concurrency
 
     def _drain(self):
+        # lock held
         while self.queue:
             inst = self._pick_idle()
             if inst is None:
@@ -175,6 +198,7 @@ class AutoscalingService:
             self._serve(inst, req)
 
     def _pick_idle(self) -> Instance | None:
+        # lock held
         best = None
         for i in self.instances.values():
             if i.state in ("idle", "busy") and not i.dead \
@@ -184,47 +208,60 @@ class AutoscalingService:
         return best
 
     def _serve(self, inst: Instance, req: _Request):
+        # lock held. A real-work handler never runs here (it goes to the
+        # pool via _run_real); the sim-mode handler is a service-time model
+        # called inline under the lock, which is safe because sim execution
+        # is single-threaded and the model must not call back into the
+        # service.
         inst.active += 1
         inst.state = "busy"
         self.metrics.record(
             f"svc.{self.name}.queue_wait", self.scheduler.now() - req.arrived
         )
         if self.real_work:
-            def work():
-                ok = True
-                try:
-                    self.handler(req.payload)
-                except Exception:
-                    ok = False
-                self._finish(inst, req, ok)
-
-            self.scheduler.schedule(0.0, work)
+            # pool thread: up to `concurrency` of these run in parallel
+            self.scheduler.schedule(0.0, self._run_real, inst, req)
         else:
             duration = float(self.handler(req.payload))
             self.scheduler.schedule(duration, self._finish, inst, req, True)
 
+    def _run_real(self, inst: Instance, req: _Request):
+        try:
+            self.handler(req.payload)
+            ok = True
+        except Exception:
+            ok = False
+        self._finish(inst, req, ok)
+
     def _finish(self, inst: Instance, req: _Request, ok: bool):
-        if inst.dead:
-            return  # killed mid-flight: no ack → pub/sub redelivers
-        inst.active -= 1
-        if inst.active == 0:
-            inst.state = "idle"
-            inst.idle_since = self.scheduler.now()
-            self._schedule_scale_down(inst)
-        self.metrics.inc(f"svc.{self.name}.completed")
-        self.metrics.record(
-            f"svc.{self.name}.latency", self.scheduler.now() - req.arrived
-        )
+        with self._lock:
+            if inst.dead:
+                return  # killed mid-flight: no ack → pub/sub redelivers
+            inst.active -= 1
+            if inst.active == 0:
+                inst.state = "idle"
+                inst.idle_since = self.scheduler.now()
+                self._schedule_scale_down(inst)
+            self.metrics.inc(f"svc.{self.name}.completed")
+            self.metrics.record(
+                f"svc.{self.name}.latency", self.scheduler.now() - req.arrived
+            )
+        # ack/nack outside the lock: it may re-enter receive() via the
+        # subscription's redelivery pump
         req.done(ok)
-        self._drain()
+        with self._lock:
+            self._drain()
 
     # ---- introspection ---------------------------------------------------------
     def instance_count(self) -> int:
-        return len([i for i in self.instances.values() if i.state != "stopped"])
+        with self._lock:
+            return len([i for i in self.instances.values()
+                        if i.state != "stopped"])
 
     def stats(self) -> dict:
-        return {
-            "instances": self.instance_count(),
-            "queued": len(self.queue),
-            "cold_starts": self.cold_starts,
-        }
+        with self._lock:
+            return {
+                "instances": self.instance_count(),
+                "queued": len(self.queue),
+                "cold_starts": self.cold_starts,
+            }

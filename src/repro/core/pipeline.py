@@ -9,9 +9,17 @@ discrete-event simulation), so the same wiring backs:
   into DICOM Part-10 bytes in the DICOM-store bucket),
 * the Figure 2/3 simulations at institutional scale,
 * the fault-tolerance tests (killed workers, redelivery, idempotent writes).
+
+In real mode (``convert`` supplied + ``RealScheduler``) the service executes
+up to ``concurrency`` conversions per instance **in parallel** on the
+scheduler's worker pool — the converter is thread-safe and its heavy host
+stages release the GIL — so a multi-slide batch overlaps downloads,
+transform dispatches, and entropy coding across slides.
 """
 from __future__ import annotations
 
+import threading
+import time
 from typing import Callable
 
 from repro.core.autoscaler import AutoscalingService
@@ -76,6 +84,7 @@ class ConversionPipeline:
             hedge_after=hedge_after, dlq=self.dlq,
         )
         self.converted: list[str] = []
+        self._converted_lock = threading.Lock()
 
     # ---- subscription push endpoint → service --------------------------
     def _endpoint(self, msg: Message, ctx: DeliveryCtx):
@@ -93,13 +102,50 @@ class ConversionPipeline:
         out_key = event["name"].rsplit(".", 1)[0] + ".dcm"
         self.dicom.put(out_key, dcm_bytes,
                        metadata={"source_generation": obj.generation})
-        self.converted.append(out_key)
+        with self._converted_lock:
+            self.converted.append(out_key)
         return None
 
     # ---- ingestion --------------------------------------------------------
     def ingest(self, key: str, data: bytes, metadata: dict | None = None):
         """A scanner drops a slide into the landing zone."""
         return self.landing.put(key, data, metadata)
+
+    def run_batch(self, slides: dict[str, bytes],
+                  metadata: dict[str, dict] | None = None, *,
+                  timeout: float = 600.0,
+                  poll: float = 0.002) -> dict[str, bytes]:
+        """Real-mode batch driver: ingest every slide, wait for the studies.
+
+        Blocks (wall clock — use with ``RealScheduler``) until every
+        slide's study tar is durably in the DICOM store, then returns
+        ``{landing key: study tar bytes}``. Completion is judged by
+        *successful* conversions (``self.converted``), not the service's
+        completion metric, which also counts failed attempts that the
+        subscription will still redeliver. Raises ``TimeoutError`` if the
+        batch does not finish within ``timeout`` seconds.
+        """
+        out_keys = {k: k.rsplit(".", 1)[0] + ".dcm" for k in slides}
+        # only conversions recorded after this call started count, so a
+        # reused pipeline can't satisfy a new batch with stale studies
+        with self._converted_lock:
+            start = len(self.converted)
+        for key, data in slides.items():
+            meta = (metadata or {}).get(key, {"slide_id": key})
+            self.ingest(key, data, meta)
+        done: set[str] = set()
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._converted_lock:
+                done = set(self.converted[start:])
+            if all(v in done for v in out_keys.values()):
+                return {k: self.dicom.get(v).data
+                        for k, v in out_keys.items()}
+            time.sleep(poll)
+        raise TimeoutError(
+            f"batch conversion incomplete after {timeout}s "
+            f"({len(done & set(out_keys.values()))}/{len(out_keys)} "
+            "studies stored)")
 
     # ---- reporting -------------------------------------------------------
     def instance_series(self):

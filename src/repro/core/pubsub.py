@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from collections import defaultdict, deque
 from typing import Callable
 
@@ -64,7 +65,12 @@ class Topic:
 
 
 class DeliveryCtx:
-    """Ack handle given to push endpoints."""
+    """Ack handle given to push endpoints.
+
+    Settlement (ack / nack / deadline expiry) is atomic under the owning
+    subscription's lock, so concurrent real-mode workers racing a deadline
+    timer resolve to exactly one outcome.
+    """
 
     def __init__(self, sub: "Subscription", msg: Message, attempt: int):
         self.sub, self.msg, self.attempt = sub, msg, attempt
@@ -73,13 +79,11 @@ class DeliveryCtx:
         self.hedge_handle = None
 
     def ack(self):
-        if not self.done:
-            self.done = True
+        if self.sub._settle(self):
             self.sub._on_ack(self)
 
     def nack(self, reason: str = ""):
-        if not self.done:
-            self.done = True
+        if self.sub._settle(self):
             self.sub._on_nack(self, reason or "nack")
 
 
@@ -114,25 +118,41 @@ class Subscription:
         self.acked: set[int] = set()
         self._ordered_busy: set[str] = set()
         self._ordered_backlog: dict[str, deque] = defaultdict(deque)
+        # guards backlog/outstanding/acked; endpoints are always invoked
+        # through the scheduler (never under this lock), so concurrent
+        # real-mode workers acking in parallel cannot corrupt the pump
+        self._lock = threading.RLock()
         topic.subscribe(self)
+
+    def _settle(self, ctx: DeliveryCtx) -> bool:
+        """Atomically claim a delivery's completion; False if already done."""
+        with self._lock:
+            if ctx.done:
+                return False
+            ctx.done = True
+            return True
 
     # ---- intake ----------------------------------------------------------
     def _enqueue(self, msg: Message, attempt: int = 1):
-        if msg.ordering_key is not None:
-            if msg.ordering_key in self._ordered_busy:
-                self._ordered_backlog[msg.ordering_key].append((msg, attempt))
-                return
-            self._ordered_busy.add(msg.ordering_key)
-        self.backlog.append((msg, attempt))
-        self._pump()
+        with self._lock:
+            if msg.ordering_key is not None:
+                if msg.ordering_key in self._ordered_busy:
+                    self._ordered_backlog[msg.ordering_key].append(
+                        (msg, attempt))
+                    return
+                self._ordered_busy.add(msg.ordering_key)
+            self.backlog.append((msg, attempt))
+            self._pump()
 
     def _pump(self):
+        # lock held
         while self.backlog and len(self.outstanding) < self.max_outstanding:
             msg, attempt = self.backlog.popleft()
             self._deliver(msg, attempt)
 
     # ---- delivery --------------------------------------------------------
     def _deliver(self, msg: Message, attempt: int):
+        # lock held
         if msg.message_id in self.acked:  # duplicate of an acked message
             return
         ctx = DeliveryCtx(self, msg, attempt)
@@ -155,20 +175,22 @@ class Subscription:
 
     # ---- completion paths --------------------------------------------------
     def _cleanup(self, ctx: DeliveryCtx):
-        self.outstanding.pop(ctx.msg.message_id, None)
-        for h in (ctx.deadline_handle, ctx.hedge_handle):
-            if h is not None:
-                h.cancel()
-        key = ctx.msg.ordering_key
-        if key is not None and ctx.msg.message_id in self.acked:
-            self._ordered_busy.discard(key)
-            if self._ordered_backlog[key]:
-                nxt, att = self._ordered_backlog[key].popleft()
-                self._enqueue(nxt, att)
-        self._pump()
+        with self._lock:
+            self.outstanding.pop(ctx.msg.message_id, None)
+            for h in (ctx.deadline_handle, ctx.hedge_handle):
+                if h is not None:
+                    h.cancel()
+            key = ctx.msg.ordering_key
+            if key is not None and ctx.msg.message_id in self.acked:
+                self._ordered_busy.discard(key)
+                if self._ordered_backlog[key]:
+                    nxt, att = self._ordered_backlog[key].popleft()
+                    self._enqueue(nxt, att)
+            self._pump()
 
     def _on_ack(self, ctx: DeliveryCtx):
-        self.acked.add(ctx.msg.message_id)
+        with self._lock:
+            self.acked.add(ctx.msg.message_id)
         self.metrics.inc(f"sub.{self.name}.acks")
         self.metrics.record(
             f"sub.{self.name}.latency",
@@ -182,17 +204,17 @@ class Subscription:
         self._retry(ctx, reason)
 
     def _on_deadline(self, ctx: DeliveryCtx):
-        if ctx.done:
+        if not self._settle(ctx):
             return
-        ctx.done = True
         self.metrics.inc(f"sub.{self.name}.deadline_expired")
         self._cleanup(ctx)
         self._retry(ctx, "ack deadline expired")
 
     def _on_hedge(self, ctx: DeliveryCtx):
         """Straggler mitigation: fire a duplicate delivery, original stays."""
-        if ctx.done or ctx.msg.message_id in self.acked:
-            return
+        with self._lock:
+            if ctx.done or ctx.msg.message_id in self.acked:
+                return
         self.metrics.inc(f"sub.{self.name}.hedged")
         # duplicate delivery outside the outstanding map (original still owns it)
         dup = DeliveryCtx(self, ctx.msg, ctx.attempt)
@@ -217,8 +239,9 @@ class Subscription:
 
     # ---- introspection -----------------------------------------------------
     def stats(self) -> dict:
-        return {
-            "backlog": len(self.backlog),
-            "outstanding": len(self.outstanding),
-            "acked": len(self.acked),
-        }
+        with self._lock:
+            return {
+                "backlog": len(self.backlog),
+                "outstanding": len(self.outstanding),
+                "acked": len(self.acked),
+            }

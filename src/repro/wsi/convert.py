@@ -5,17 +5,33 @@ pyramid with the Pallas downsample kernel, transform-code every tile (Pallas
 DCT/quant + host Huffman), wrap each level in a DICOM Part-10 instance
 (TILED_FULL), and bundle the study as a tar archive.
 
-Two compute paths (see DESIGN.md, "Whole-level batched dispatch"):
+Three compute paths (see DESIGN.md, "Whole-level batched dispatch" and
+"Pipelined conversion"), all emitting **byte-identical** study tars:
 
-- **batched** (default): level 0 is uploaded to the device once; every
-  further level is produced by chaining ``downsample2x2`` on device (no
-  per-level host ``transpose``/``astype``/``clip`` round-trip), and all
-  tiles of a level are transform-coded by a single fused ``jpeg_transform``
-  dispatch followed by the vectorized host entropy coder.
+- **pipelined** (default): the staged, overlapping engine. Level-0 tile
+  rows are uploaded to the device as ``PSVReader`` inflates them (no full
+  host ``(H, W, 3)`` array), and JAX async dispatch is used to enqueue the
+  ``jpeg_transform`` + ``downsample2x2`` work for level N+1 on device
+  *before* the host runs the entropy coder + Part-10 wrap for level N
+  (double-buffered coefficient fetch via ``copy_to_host_async``).
+- **batched sync** (``ConvertOptions(pipelined=False)``): level 0 is
+  uploaded once; every further level is produced by chaining
+  ``downsample2x2`` on device, and all tiles of a level are transform-coded
+  by a single fused ``jpeg_transform`` dispatch followed by the vectorized
+  host entropy coder — but each level's host work completes before the next
+  level's device work is enqueued. Kept as the A/B baseline for the
+  pipelined path.
 - **per-tile** (``ConvertOptions(batched=False)``): the original path — host
   pyramid, ``[encode_tile(f) for f in frames]`` with 4 dispatches per tile.
-  Kept for A/B benchmarking; both paths emit byte-identical DICOM pixel
-  data.
+  Kept for A/B benchmarking.
+
+**Determinism**: the study/series UIDs are minted once and stored in the
+manifest (key ``"uids"``), and every level's SOP instance UID is derived
+from the series UID + instance number. Two conversions of the same slide
+that share a manifest (or whose manifests were seeded with the same
+``"uids"`` entry) therefore produce byte-identical study tars — this is
+what the pipelined-vs-sync A/B asserts on whole archives, and what makes
+manifest resume reproduce a fresh conversion exactly.
 
 **Crash/resume**: ``ConvertOptions.manifest`` is the single store of
 finished-level DICOM bytes (level index → Part-10 bytes). A converter
@@ -25,15 +41,23 @@ idempotent resume gives effectively-once conversion). The study tar is
 assembled directly from the manifest, so finished-level bytes are stored
 exactly once; call ``ConvertOptions.clear_manifest()`` to release them once
 the study archive has been durably stored.
+
+**Thread safety**: ``convert_wsi_to_dicom`` shares no mutable module state
+(the entropy coder's caches are lock-protected), so the real-mode pipeline
+runs up to ``concurrency`` conversions in parallel worker threads — the
+transform dispatch, the numpy entropy coder, and zlib inflation all release
+the GIL for their heavy regions.
 """
 from __future__ import annotations
 
 import io
 import json
 import tarfile
+from collections import deque
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import downsample2x2, jpeg_transform
@@ -48,21 +72,60 @@ __all__ = ["convert_wsi_to_dicom", "study_levels", "ConvertOptions"]
 class ConvertOptions:
     """Converter knobs.
 
-    ``manifest`` maps level index (str) to the finished level's Part-10
-    bytes; it is both the resume checkpoint and the only copy of those bytes
-    held by the converter (the output tar is written from it directly).
+    min_level_size
+        Stop the pyramid once the next level's short edge would fall below
+        this (pixels). Levels smaller than one tile emit zero full frames.
+    jpeg
+        ``True`` → encapsulated JPEG baseline transfer syntax; ``False`` →
+        native (uncompressed) explicit-VR-LE pixel data. The batched/
+        pipelined device paths only apply to JPEG output; ``jpeg=False``
+        always runs the host per-tile wrap.
+    manifest
+        Resume checkpoint *and* the only copy of finished-level bytes held
+        by the converter: maps level index (str) to that level's Part-10
+        bytes, plus the ``"uids"`` entry (JSON ``[study_uid, series_uid]``)
+        minted on first use so a resumed — or deliberately re-seeded —
+        conversion reproduces the original bytes exactly. The output tar is
+        written from the manifest directly.
+    batched
+        ``True`` (default): device-resident pyramid, one fused transform
+        dispatch per level, vectorized host entropy coder. ``False``: the
+        original per-tile path (4 dispatches + Python Huffman loop per
+        tile), kept for A/B benchmarking.
+    pipelined
+        ``True`` (default): the staged overlapping engine — streamed level-0
+        upload and device work for level N+1 enqueued before the host
+        finishes level N. ``False``: strictly sequential stages (the PR-1
+        batched path), kept as the byte-identity A/B baseline. Only
+        effective when ``batched`` and ``jpeg`` are both ``True``.
     """
 
     def __init__(self, *, min_level_size: int = 256, jpeg: bool = True,
-                 manifest: dict | None = None, batched: bool = True):
+                 manifest: dict | None = None, batched: bool = True,
+                 pipelined: bool = True):
         self.min_level_size = min_level_size
         self.jpeg = jpeg
         self.batched = batched
+        self.pipelined = pipelined
         self.manifest = manifest if manifest is not None else {}
 
     def clear_manifest(self) -> None:
-        """Drop finished-level bytes (call after the study tar is stored)."""
+        """Drop finished-level bytes (call after the study tar is stored).
+
+        Also drops the stored study/series UIDs, so a conversion rerun
+        against the cleared manifest mints fresh identifiers.
+        """
         self.manifest.clear()
+
+
+def _study_uids(opt: ConvertOptions) -> tuple[str, str]:
+    """(study_uid, series_uid), minted once and persisted in the manifest."""
+    raw = opt.manifest.get("uids")
+    if raw is None:
+        raw = json.dumps([new_uid(), new_uid()])
+        opt.manifest["uids"] = raw
+    study_uid, series_uid = json.loads(raw)
+    return study_uid, series_uid
 
 
 def _level_frames(img: np.ndarray, tile: int) -> tuple[list[np.ndarray], int, int]:
@@ -88,19 +151,139 @@ def _tile_batch(dev: jnp.ndarray, tile: int) -> jnp.ndarray:
             .transpose(1, 3, 0, 2, 4).reshape(bh * bw, 3, tile, tile))
 
 
-def _encode_level_batched(dev: jnp.ndarray, tile: int) -> list[bytes]:
-    """All tiles of a device-resident level in one transform dispatch."""
-    coef = np.asarray(jpeg_transform(_tile_batch(dev, tile)))
-    return encode_coef_batch(coef)
+def _upload_level0(rd: PSVReader) -> jnp.ndarray:
+    """Stream level 0 to the device one tile row at a time.
+
+    Each row strip is handed to ``jax.device_put`` as soon as its tiles are
+    inflated, so the host↔device copy of row r overlaps the zlib inflation
+    of row r+1; the full-resolution ``(H, W, 3)`` host array of the sync
+    path is never materialized. The strips hold exact uint8 values in
+    float32, so the device concatenation is bit-identical to a whole-level
+    upload.
+    """
+    tile, W = rd.tile, rd.W
+    bh, bw = rd.grid
+    strips = []
+    for r in range(bh):
+        row = np.empty((3, tile, W), np.float32)
+        for c in range(bw):
+            row[:, :, c * tile:(c + 1) * tile] = \
+                np.transpose(rd.read_tile(r, c), (2, 0, 1))
+        strips.append(jax.device_put(row))
+    return strips[0] if len(strips) == 1 else jnp.concatenate(strips, axis=1)
 
 
-def convert_wsi_to_dicom(psv_bytes: bytes, metadata: dict | None = None,
-                         options: ConvertOptions | None = None) -> bytes:
-    """Full conversion. Returns a tar archive of per-level .dcm files."""
-    opt = options or ConvertOptions()
-    rd = PSVReader(psv_bytes)
+def _wrap_level(opt: ConvertOptions, li: int, frames: list[bytes], ts: str,
+                tile: int, H: int, W: int, metadata: dict | None,
+                study_uid: str, series_uid: str) -> None:
+    """Wrap one finished level as Part-10 bytes into the manifest."""
+    opt.manifest[str(li)] = write_part10(
+        frames=frames, rows=tile, cols=tile,
+        total_rows=H, total_cols=W, transfer_syntax=ts,
+        study_uid=study_uid, series_uid=series_uid,
+        sop_instance_uid=f"{series_uid}.{li + 1}",
+        instance_number=li + 1,
+        metadata={0: (metadata or {}).get("slide_id", "unknown"),
+                  1: f"level={li}"},
+    )
+
+
+# how many chunk transforms may be in flight on the device ahead of the
+# host consumer (bounds device-side coefficient memory to ~LOOKAHEAD chunks,
+# i.e. about two pyramid levels at the default ~4 chunks per level)
+_LOOKAHEAD = 8
+
+
+def _level_chunks(batch: jnp.ndarray, bh: int, bw: int) -> list[jnp.ndarray]:
+    """Split a level's (N, 3, T, T) tile batch into row-aligned chunks.
+
+    Chunk boundaries sit on whole tile rows and each tile is entropy-coded
+    as its own scan, so per-chunk transform + encode emits exactly the
+    frames of the whole-level dispatch, in the same row-major order.
+    Targets ~4 chunks per level so the host consumer always has device
+    work to hide behind, without shrinking the batched dispatch too far.
+    """
+    rows_per = max(1, bh // 4)
+    return [batch[r0 * bw:min(r0 + rows_per, bh) * bw]
+            for r0 in range(0, bh, rows_per)]
+
+
+def _convert_pipelined(rd: PSVReader, metadata: dict | None,
+                       opt: ConvertOptions, study_uid: str,
+                       series_uid: str) -> int:
+    """The staged overlapping engine. Returns the number of levels.
+
+    Two passes over the pyramid, connected by JAX async dispatch:
+
+    1. **Plan (device walk)** — chain the ``downsample2x2`` pyramid on
+       device and slice every unfinished level's tile batch into row
+       chunks. Nothing is fetched; this just enqueues cheap device work.
+    2. **Windowed transform + consume** — dispatch up to ``_LOOKAHEAD``
+       chunk transforms ahead of the host (each immediately starts its
+       async device→host copy), then consume chunks in order: while the
+       host entropy-codes and Part-10-wraps chunk k, the device is already
+       transforming chunks k+1 … k+_LOOKAHEAD and the remaining pyramid.
+
+    The per-chunk math and the emitted frame order are identical to the
+    sync engine's whole-level dispatch — only host/device overlap changes —
+    so the output bytes are identical (asserted in tests and the bench).
+    """
     tile = rd.tile
-    study_uid, series_uid = new_uid(), new_uid()
+    dev = _upload_level0(rd)
+
+    stream: list[tuple[int, object] | None] = []  # (li, chunk batch)
+    dims: dict[int, tuple[int, int]] = {}
+    remaining: dict[int, int] = {}  # chunks left to consume per level
+    batch = chunks = None
+    li = 0
+    while True:
+        H, W = int(dev.shape[1]), int(dev.shape[2])
+        if str(li) not in opt.manifest:
+            bh, bw = H // tile, W // tile
+            batch = _tile_batch(dev, tile)
+            chunks = [batch] if (bh == 0 or bw == 0) \
+                else _level_chunks(batch, bh, bw)
+            dims[li] = (H, W)
+            remaining[li] = len(chunks)
+            stream += [(li, c) for c in chunks]
+        if min(H, W) // 2 < opt.min_level_size:
+            break
+        dev = jnp.clip(jnp.round(downsample2x2(dev)), 0, 255)
+        li += 1
+    del dev, batch, chunks  # only the stream keeps device references now
+
+    def _dispatch(batch):
+        coef = jpeg_transform(batch)
+        if hasattr(coef, "copy_to_host_async"):
+            coef.copy_to_host_async()  # start the fetch behind the window
+        return coef
+
+    window: deque[tuple[int, object]] = deque()
+    frames: dict[int, list[bytes]] = {pli: [] for pli in remaining}
+    pos = 0
+    while pos < len(stream) or window:
+        while pos < len(stream) and len(window) < _LOOKAHEAD:
+            pli, batch = stream[pos]
+            stream[pos] = None  # window + XLA now own the chunk's buffers
+            window.append((pli, _dispatch(batch)))
+            pos += 1
+        pli, coef = window.popleft()
+        frames[pli] += encode_coef_batch(np.asarray(coef))
+        remaining[pli] -= 1
+        if remaining[pli] == 0:
+            # checkpoint the level as soon as its last chunk lands, so a
+            # crash mid-conversion resumes from every finished level
+            H, W = dims[pli]
+            _wrap_level(opt, pli, frames.pop(pli), TS_JPEG_BASELINE,
+                        tile, H, W, metadata, study_uid, series_uid)
+    return li + 1
+
+
+def _convert_sync(rd: PSVReader, metadata: dict | None, opt: ConvertOptions,
+                  study_uid: str, series_uid: str) -> int:
+    """The strictly sequential engine (batched or per-tile). Returns the
+    number of levels."""
+    tile = rd.tile
 
     # level 0 assembled tile-by-tile (streaming); higher levels by 2× pooling
     H, W = rd.H, rd.W
@@ -122,7 +305,8 @@ def convert_wsi_to_dicom(psv_bytes: bytes, metadata: dict | None = None,
             H, W = level.shape[:2]
         if str(li) not in opt.manifest:
             if opt.jpeg and opt.batched:
-                frames = _encode_level_batched(dev, tile)
+                coef = np.asarray(jpeg_transform(_tile_batch(dev, tile)))
+                frames = encode_coef_batch(coef)
                 ts = TS_JPEG_BASELINE
             else:
                 if opt.batched:
@@ -135,16 +319,10 @@ def convert_wsi_to_dicom(psv_bytes: bytes, metadata: dict | None = None,
                     frames = [np.ascontiguousarray(f).tobytes()
                               for f in frames_rgb]
                     ts = TS_EXPLICIT_LE
-            opt.manifest[str(li)] = write_part10(
-                frames=frames, rows=tile, cols=tile,
-                total_rows=H, total_cols=W, transfer_syntax=ts,
-                study_uid=study_uid, series_uid=series_uid,
-                instance_number=li + 1,
-                metadata={0: (metadata or {}).get("slide_id", "unknown"),
-                          1: f"level={li}"},
-            )
+            _wrap_level(opt, li, frames, ts, tile, H, W, metadata,
+                        study_uid, series_uid)
         if min(H, W) // 2 < opt.min_level_size:
-            break
+            return li + 1
         if opt.batched:
             dev = jnp.clip(jnp.round(downsample2x2(dev)), 0, 255)
         else:
@@ -154,7 +332,11 @@ def convert_wsi_to_dicom(psv_bytes: bytes, metadata: dict | None = None,
                             0, 255).astype(np.uint8)
         li += 1
 
-    n_levels = li + 1
+
+def _pack_study(opt: ConvertOptions, n_levels: int, study_uid: str,
+                tile: int) -> bytes:
+    """Assemble the study tar directly from the manifest (deterministic:
+    fixed member mtimes, levels in index order)."""
     buf = io.BytesIO()
     with tarfile.open(fileobj=buf, mode="w") as tar:
         manifest = {"levels": n_levels, "study_uid": study_uid,
@@ -169,6 +351,20 @@ def convert_wsi_to_dicom(psv_bytes: bytes, metadata: dict | None = None,
             info.size = len(blob)
             tar.addfile(info, io.BytesIO(blob))
     return buf.getvalue()
+
+
+def convert_wsi_to_dicom(psv_bytes: bytes, metadata: dict | None = None,
+                         options: ConvertOptions | None = None) -> bytes:
+    """Full conversion. Returns a tar archive of per-level .dcm files."""
+    opt = options or ConvertOptions()
+    rd = PSVReader(psv_bytes)
+    study_uid, series_uid = _study_uids(opt)
+    if opt.pipelined and opt.batched and opt.jpeg:
+        n_levels = _convert_pipelined(rd, metadata, opt, study_uid,
+                                      series_uid)
+    else:
+        n_levels = _convert_sync(rd, metadata, opt, study_uid, series_uid)
+    return _pack_study(opt, n_levels, study_uid, rd.tile)
 
 
 def study_levels(study_tar: bytes) -> dict[str, bytes]:

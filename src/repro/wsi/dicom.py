@@ -186,45 +186,72 @@ def write_part10(
 def read_part10(data: bytes) -> tuple[Dataset, list[bytes]]:
     """Parse a Part-10 file produced by ``write_part10``.
 
-    Returns (dataset incl. file meta, pixel-data frames).
+    Returns (dataset incl. file meta, pixel-data frames). Truncated or
+    otherwise malformed input raises ``ValueError("corrupt Part-10 …")``
+    instead of leaking ``struct.error`` / ``UnicodeDecodeError`` from the
+    element loop.
     """
-    if data[128:132] != b"DICM":
-        raise ValueError("missing DICM magic")
+    if len(data) < 132 or data[128:132] != b"DICM":
+        raise ValueError("corrupt Part-10 stream: missing DICM magic")
     pos = 132
     ds = Dataset()
     frames: list[bytes] = []
     n = len(data)
-    while pos < n:
-        g, e = struct.unpack_from("<HH", data, pos)
-        pos += 4
-        vr = data[pos : pos + 2].decode()
-        if vr in _LONG_VRS:
-            ln = struct.unpack_from("<I", data, pos + 4)[0]
-            pos += 8
-        else:
-            ln = struct.unpack_from("<H", data, pos + 2)[0]
+    try:
+        while pos < n:
+            g, e = struct.unpack_from("<HH", data, pos)
             pos += 4
-        if (g, e) == (0x7FE0, 0x0010):
-            if ln == 0xFFFFFFFF:  # encapsulated
-                items = []
-                while True:
-                    ig, ie, il = struct.unpack_from("<HHI", data, pos)
-                    pos += 8
-                    if (ig, ie) == (0xFFFE, 0xE0DD):
-                        break
-                    items.append(data[pos : pos + il])
-                    pos += il
-                frames = items[1:]  # drop basic offset table
+            vr = data[pos : pos + 2].decode("ascii")
+            if not (vr.isalpha() and vr.isupper()):
+                raise ValueError(
+                    f"corrupt Part-10 stream: invalid VR {vr!r} at "
+                    f"offset {pos}")
+            if vr in _LONG_VRS:
+                ln = struct.unpack_from("<I", data, pos + 4)[0]
+                pos += 8
             else:
-                blob = data[pos : pos + ln]
-                pos += ln
-                nf = ds.get_int(0x0028, 0x0008) or 1
-                rows = ds.get_int(0x0028, 0x0010)
-                cols = ds.get_int(0x0028, 0x0011)
-                spp = ds.get_int(0x0028, 0x0002) or 1
-                fsize = rows * cols * spp
-                frames = [blob[i * fsize : (i + 1) * fsize] for i in range(nf)]
-            continue
-        ds.elements[(g, e)] = (vr, data[pos : pos + ln])
-        pos += ln
+                ln = struct.unpack_from("<H", data, pos + 2)[0]
+                pos += 4
+            if (g, e) == (0x7FE0, 0x0010):
+                if ln == 0xFFFFFFFF:  # encapsulated
+                    items = []
+                    while True:
+                        ig, ie, il = struct.unpack_from("<HHI", data, pos)
+                        pos += 8
+                        if (ig, ie) == (0xFFFE, 0xE0DD):
+                            break
+                        if (ig, ie) != (0xFFFE, 0xE000) or pos + il > n:
+                            raise ValueError(
+                                "corrupt Part-10 stream: bad pixel-data "
+                                f"item at offset {pos - 8}")
+                        items.append(data[pos : pos + il])
+                        pos += il
+                    frames = items[1:]  # drop basic offset table
+                else:
+                    if pos + ln > n:
+                        raise ValueError(
+                            "corrupt Part-10 stream: pixel data truncated")
+                    blob = data[pos : pos + ln]
+                    pos += ln
+                    nf = ds.get_int(0x0028, 0x0008) or 1
+                    rows = ds.get_int(0x0028, 0x0010)
+                    cols = ds.get_int(0x0028, 0x0011)
+                    spp = ds.get_int(0x0028, 0x0002) or 1
+                    if not rows or not cols:
+                        raise ValueError(
+                            "corrupt Part-10 stream: native pixel data "
+                            "without Rows/Columns")
+                    fsize = rows * cols * spp
+                    frames = [blob[i * fsize : (i + 1) * fsize]
+                              for i in range(nf)]
+                continue
+            if pos + ln > n:
+                raise ValueError(
+                    f"corrupt Part-10 stream: element ({g:04x},{e:04x}) "
+                    "value truncated")
+            ds.elements[(g, e)] = (vr, data[pos : pos + ln])
+            pos += ln
+    except (struct.error, UnicodeDecodeError) as exc:
+        raise ValueError(
+            f"corrupt Part-10 stream: {exc}") from None
     return ds, frames

@@ -19,10 +19,16 @@ Two encoder paths, byte-identical by construction (tested):
 Produces/consumes real JFIF bytes (SOI/APP0/DQT/SOF0/DHT/SOS/EOI, standard
 Annex-K tables, 4:4:4, byte stuffing). The decoder exists for round-trip
 tests and PSNR measurement.
+
+Both encoder paths are thread-safe (the zigzag gather-index cache is the
+only module-level mutable state and is lock-protected), and the heavy numpy
+regions release the GIL — the real-mode pipeline entropy-codes several
+slides' levels in parallel worker threads.
 """
 from __future__ import annotations
 
 import struct
+import threading
 
 import numpy as np
 
@@ -331,16 +337,21 @@ def _comp_symbols(zz: np.ndarray, comp: int, nb_tile: int):
 
 
 _ZZ_IDX_CACHE: dict[tuple[int, int], np.ndarray] = {}
+_ZZ_IDX_LOCK = threading.Lock()
 
 
 def _zigzag_gather_index(H: int, W: int) -> np.ndarray:
     """Flat (H·W,) index map: plane → row-major 8×8 blocks in zigzag order."""
     key = (H, W)
-    if key not in _ZZ_IDX_CACHE:
+    with _ZZ_IDX_LOCK:
+        cached = _ZZ_IDX_CACHE.get(key)
+    if cached is None:
         idx = np.arange(H * W).reshape(H // 8, 8, W // 8, 8)
         idx = idx.transpose(0, 2, 1, 3).reshape(-1, 64)[:, _ZIGZAG]
-        _ZZ_IDX_CACHE[key] = np.ascontiguousarray(idx.reshape(-1))
-    return _ZZ_IDX_CACHE[key]
+        cached = np.ascontiguousarray(idx.reshape(-1))
+        with _ZZ_IDX_LOCK:
+            _ZZ_IDX_CACHE[key] = cached
+    return cached
 
 
 def _stuff(packed: np.ndarray) -> bytes:

@@ -185,8 +185,9 @@ def test_manifest_is_single_store_and_clearable():
     psv = SyntheticScanner(seed=8).scan(256, 256, 256)
     opt = ConvertOptions()
     tar_bytes = convert_wsi_to_dicom(psv, options=opt)
-    # the manifest holds every finished level; the tar is written from it
-    assert set(opt.manifest) == {"0"}
+    # the manifest holds every finished level (plus the minted study/series
+    # UIDs that make resume byte-exact); the tar is written from it
+    assert set(opt.manifest) == {"0", "uids"}
     assert study_levels(tar_bytes)["level_0.dcm"] == opt.manifest["0"]
     opt.clear_manifest()
     assert opt.manifest == {}

@@ -115,3 +115,57 @@ def test_jpeg_gray_and_extreme_tiles():
         tile = np.full((64, 64, 3), fill, np.uint8)
         rec = decode_tile(encode_tile(tile))
         assert psnr(tile, rec) > 40.0
+
+
+def test_part10_native_odd_length_padded_pixeldata_roundtrip():
+    """27-byte RGB frames (3×3) make an odd PixelData blob → even-padded."""
+    rng = np.random.default_rng(7)
+    frames = [rng.integers(0, 255, size=(3, 3, 3), dtype=np.uint8).tobytes()
+              for _ in range(3)]
+    assert len(b"".join(frames)) % 2 == 1
+    blob = write_part10(frames=frames, rows=3, cols=3, total_rows=9,
+                        total_cols=3, transfer_syntax=TS_EXPLICIT_LE)
+    assert len(blob) % 2 == 0
+    ds, out = read_part10(blob)
+    assert ds.get_str(0x0002, 0x0010) == TS_EXPLICIT_LE
+    assert len(out) == 3
+    assert [bytes(f) for f in out] == frames  # pad byte stays outside frames
+
+
+# --------------------------------------------------------------------------
+# corrupt Part-10 input is rejected with a clear error
+# --------------------------------------------------------------------------
+def _valid_blob(ts=TS_EXPLICIT_LE):
+    frames = [f.tobytes() for f in _frames(2)]
+    return write_part10(frames=frames, rows=64, cols=64, total_rows=128,
+                        total_cols=64, transfer_syntax=ts)
+
+
+@pytest.mark.parametrize("mangle", [
+    lambda b: b"",                          # empty input
+    lambda b: b[:100],                      # shorter than the preamble
+    lambda b: b[:128] + b"DICX" + b[132:],  # wrong magic
+    lambda b: b[: len(b) // 2],             # truncated mid-dataset
+    lambda b: b[:-40],                      # truncated inside pixel data
+])
+def test_read_part10_rejects_corrupt_native(mangle):
+    blob = mangle(_valid_blob())
+    with pytest.raises(ValueError, match="corrupt Part-10"):
+        read_part10(blob)
+
+
+def test_read_part10_rejects_corrupt_vr_bytes():
+    blob = bytearray(_valid_blob())
+    # overwrite the first element's VR (2 bytes after its tag) with garbage
+    blob[132 + 4 : 132 + 6] = b"\xff\xfe"
+    with pytest.raises(ValueError, match="corrupt Part-10"):
+        read_part10(bytes(blob))
+
+
+def test_read_part10_rejects_truncated_encapsulated_stream():
+    rd = PSVReader(SyntheticScanner(seed=4).scan(256, 256, 256))
+    jpg = encode_tile(rd.read_tile(0, 0)[:64, :64])
+    blob = write_part10(frames=[jpg], rows=64, cols=64, total_rows=64,
+                        total_cols=64, transfer_syntax=TS_JPEG_BASELINE)
+    with pytest.raises(ValueError, match="corrupt Part-10"):
+        read_part10(blob[:-16])  # sequence-delimiter item cut off
