@@ -11,12 +11,16 @@ test:
 verify: test
 
 # CPU byte-identity smoke: the conversion benchmark with --fast asserts
-# per-tile ≡ batched ≡ pipelined ≡ concurrent output bytes on small slides
+# per-tile ≡ batched ≡ pipelined ≡ concurrent output bytes on small slides,
+# and the store benchmark asserts indexed-WADO byte identity + ≥10x plus
+# re-STOW / crash-rebuild QIDO/WADO identity
 smoke:
 	python -m benchmarks.convert_bench --fast
+	python -m benchmarks.store_bench --fast
 
-# benchmark suite: paper figures + kernels + conversion hot path
+# benchmark suite: paper figures + kernels + conversion + store hot paths
 # (writes BENCH_*.json into the working directory)
 bench:
 	python -m benchmarks.run
 	python -m benchmarks.convert_bench
+	python -m benchmarks.store_bench

@@ -1,15 +1,17 @@
-"""Render the README benchmark tables from ``BENCH_convert.json``.
+"""Render the README benchmark tables from ``BENCH_convert.json`` (and,
+when present, ``BENCH_store.json``).
 
     PYTHONPATH=src python -m benchmarks.bench_table [BENCH_convert.json]
 
 Prints GitHub-flavored markdown. The tables embedded in README.md are the
-output of this script over the checked-in ``BENCH_convert.json``; re-run
+output of this script over the checked-in ``BENCH_*.json``; re-run
 ``make bench`` followed by this module to refresh them after a change to
-the conversion hot path.
+the conversion or store hot paths.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 
@@ -53,11 +55,37 @@ def render(bench: dict) -> str:
     return "\n".join(lines)
 
 
+def render_store(bench: dict) -> str:
+    w = bench["wado"]
+    return "\n".join([
+        f"Frame-level WADO ({w['n_frames']}-frame encapsulated instance, "
+        f"{w['instance_bytes']:,} bytes):",
+        "",
+        "| path | µs/frame fetch | vs reparse |",
+        "|---|---|---|",
+        f"| reparse per fetch (seed) | {w['reparse_us_per_frame']:,.0f} | "
+        "1× |",
+        f"| `Part10Index` (cached) | {w['indexed_us_per_frame']:.2f} | "
+        f"{w['indexed_speedup']:,.0f}× |",
+        f"| store service (`retrieve_frame`) | "
+        f"{w['store_us_per_frame']:.2f} | {w['store_speedup']:,.0f}× |",
+        "",
+        f"Frames byte-identical across all paths "
+        f"(asserted in the run: {w['bytes_identical']}).",
+    ])
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_convert.json"
     with open(path) as f:
         bench = json.load(f)
     print(render(bench))
+    store_path = os.path.join(os.path.dirname(path) or ".",
+                              "BENCH_store.json")
+    if os.path.exists(store_path):
+        with open(store_path) as f:
+            print()
+            print(render_store(json.load(f)))
 
 
 if __name__ == "__main__":

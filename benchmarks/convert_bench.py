@@ -178,12 +178,15 @@ def _multi_slide(n_slides: int, slide: int, reps: int,
 
     def run_concurrent() -> tuple[float, dict]:
         sched = RealScheduler(workers=2 * instances * concurrency)
+        # subscribers=False: this bench isolates the conversion wiring —
+        # the store's validation/ML fan-out (which would compete for the
+        # same cores mid-batch) is benchmarked by store_bench instead
         pipe = ConversionPipeline(
             sched,
             convert=lambda data, meta: convert_one(meta["slide_id"], data,
                                                    True),
             max_instances=instances, concurrency=concurrency,
-            cold_start=0.0, scale_down_delay=5.0,
+            cold_start=0.0, scale_down_delay=5.0, subscribers=False,
         )
         # time until the last study is stored — not until the service has
         # also scaled back to zero (idle wind-down is not batch runtime)

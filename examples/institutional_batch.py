@@ -81,6 +81,12 @@ def run_real_batch(n: int, size: int, concurrency: int) -> None:
         n_dcm = sum(1 for k in study if k.endswith(".dcm"))
         print(f"  gs://dicom-store/{key}: {n_dcm} levels, "
               f"{len(pipe.dicom.get(key).data):,} bytes")
+    sched.run(until=30.0)  # let the store ingest + subscribers drain
+    studies = pipe.store_service.search_studies()
+    print(f"  enterprise store: {len(studies)} studies, "
+          f"{sum(pipe.store_service.study_summary(s)['n_instances'] for s in studies)} instances | "
+          f"validated: {len(pipe.validator.checked)}, "
+          f"ml-scored: {len(pipe.ml_subscriber.predictions)}")
     print(f"  cold starts: {pipe.service.cold_starts}, "
           f"acks: {pipe.metrics.counters['sub.wsi2dcm-push.acks']:g}\n")
     sched.shutdown()

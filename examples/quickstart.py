@@ -5,14 +5,17 @@
 Scans a synthetic proprietary-format (PSV) slide, drops it in the landing
 bucket, and lets the event chain do the rest: object-creation notification →
 pub/sub topic → push subscription → autoscaled converter (the pipelined
-JAX/Pallas transform + host Huffman engine) → DICOM store. Then reads the
-DICOM study back and verifies it.
+JAX/Pallas transform + host Huffman engine) → DICOM-store bucket → store
+ingest → enterprise DICOM store → validation + ML-inference subscribers.
+Then reads the DICOM study back and verifies it.
 
 Expected output: the PSV byte count, the converted study in the DICOM
 store (one .dcm per pyramid level — a 512² slide yields 2 levels), each
 level's dimensions/frame count/transfer syntax, a level-0 PSNR in the
-30–40 dB range against the scanner's pixels, the pipeline's metric
-counters, and a final "quickstart OK".
+30–40 dB range against the scanner's pixels, the enterprise store's QIDO
+view of the study with the validation verdict and the mock ML model's
+frame scores (fetched via indexed frame-level WADO), the pipeline's
+metric counters, and a final "quickstart OK".
 """
 import sys
 from pathlib import Path
@@ -60,6 +63,20 @@ def main():
     rec = decode_tile(bytes(frames[0]).rstrip(b"\x00") or frames[0])
     print(f"== fidelity: level-0 frame-0 PSNR vs scanner output: "
           f"{psnr(tile0, rec):.1f} dB ==")
+
+    print("== enterprise DICOM store (QIDO) + subscribers ==")
+    svc = pipe.store_service
+    for study_uid in svc.search_studies(modality="SM"):
+        s = svc.study_summary(study_uid)
+        print(f"   study {study_uid[:24]}…: {s['n_series']} series, "
+              f"{s['n_instances']} instances, {s['total_frames']} frames")
+    print(f"   validation: {len(pipe.validator.checked)} passed, "
+          f"{len(pipe.validator.quarantined)} quarantined")
+    for sop, pred in sorted(pipe.ml_subscriber.predictions.items()):
+        feats = ", ".join(f"{v:.1f}" for v in pred["features"])
+        print(f"   ml-inference {sop[-12:]}: {pred['frames_scored']} "
+              f"frames via WADO, features [{feats}]")
+
     print("== metrics ==")
     for k, v in sorted(pipe.metrics.counters.items()):
         print(f"   {k} = {v:g}")

@@ -109,7 +109,10 @@ class RealScheduler:
             finally:
                 self._done()
 
-        self._pool.submit(wrapped)
+        try:
+            self._pool.submit(wrapped)
+        except RuntimeError:  # scheduled after shutdown: drop the event
+            self._done()
 
     def schedule(self, delay: float, fn: Callable, *args) -> Handle:
         h = Handle()

@@ -1,5 +1,6 @@
 """The paper's Figure-1 wiring: landing bucket → notification → pub/sub topic
-→ push subscription → autoscaling conversion service → DICOM store.
+→ push subscription → autoscaling conversion service → DICOM store →
+downstream subscribers (validation, ML inference).
 
 ``ConversionPipeline`` assembles the microservices; the actual per-image work
 is injected (`convert` callable for real execution, `service_time` model for
@@ -15,11 +16,20 @@ up to ``concurrency`` conversions per instance **in parallel** on the
 scheduler's worker pool — the converter is thread-safe and its heavy host
 stages release the GIL — so a multi-slide batch overlaps downloads,
 transform dispatches, and entropy coding across slides.
+
+The Figure-1 final arrow is event-driven like the first one: the converted
+study tar's ``OBJECT_FINALIZE`` in the dicom bucket pushes an ingest
+subscription that unpacks the archive into the enterprise
+``DicomStoreService`` (idempotent STOW under canonical instance keys),
+whose own ``dicom-instance-stored`` topic fans out to the attached
+validation and mock ML-inference subscribers.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
+from collections import Counter
 from typing import Callable
 
 from repro.core.autoscaler import AutoscalingService
@@ -27,7 +37,19 @@ from repro.core.metrics import Metrics
 from repro.core.pubsub import DeliveryCtx, Message, Subscription, Topic
 from repro.core.storage import LifecycleRule, ObjectStore
 
-__all__ = ["ConversionPipeline"]
+__all__ = ["ConversionPipeline", "derive_out_key"]
+
+
+def derive_out_key(key: str) -> str:
+    """Landing key → DICOM-store study key, stripping only a trailing
+    extension of the *basename* — dots in directory components
+    (``scans.v1/slide``) and extensionless or dotfile basenames survive
+    unmangled. Note ``a.svs`` and ``a.tiff`` still map to the same base
+    key; ``ConversionPipeline._work`` disambiguates such collisions with a
+    per-source suffix."""
+    head, _, base = key.rpartition("/")
+    stem = base.rsplit(".", 1)[0] or base
+    return f"{head}/{stem}.dcm" if head else f"{stem}.dcm"
 
 
 class ConversionPipeline:
@@ -47,6 +69,9 @@ class ConversionPipeline:
         hedge_after: float | None = None,
         landing_bucket: str = "wsi-landing",
         dicom_bucket: str = "dicom-store",
+        instance_bucket: str = "dicom-instances",
+        quarantine_bucket: str = "dicom-dlq",
+        subscribers: bool = True,
         lifecycle_cold_after: float = 30 * 24 * 3600.0,
         lifecycle_archive_after: float = 365 * 24 * 3600.0,
     ):
@@ -84,14 +109,86 @@ class ConversionPipeline:
             hedge_after=hedge_after, dlq=self.dlq,
         )
         self.converted: list[str] = []
+        self._conversions: list[tuple[str, str]] = []  # (source, out key)
         self._converted_lock = threading.Lock()
+        self._out_lock = threading.Lock()  # serializes out-key claims
+        self._out_claims: dict[str, str] = {}  # out key -> source key
+
+        # --- enterprise DICOM store + downstream subscribers ----------------
+        # (the Figure-1 final arrow, itself event-driven: study tar lands in
+        # the dicom bucket → OBJECT_FINALIZE → ingest subscription → STOW →
+        # instance-stored topic → validation / ML fan-out)
+        from repro.wsi.store_service import DicomStoreService
+
+        self.instances = self.store.bucket(instance_bucket)
+        self.store_service = DicomStoreService(
+            self.instances, scheduler, self.metrics)
+        self.store_topic = Topic("dicom-study-finalize", scheduler,
+                                 self.metrics)
+        self.store_dlq = Topic("dicom-store-ingest-dlq", scheduler,
+                               self.metrics)
+        self.dicom.add_notification(self.store_topic, "OBJECT_FINALIZE")
+        self.store_subscription = Subscription(
+            self.store_topic, "dicom-store-ingest", self._store_endpoint,
+            ack_deadline=ack_deadline,
+            max_delivery_attempts=max_delivery_attempts, dlq=self.store_dlq,
+        )
+        self.validator = self.ml_subscriber = None
+        if subscribers:
+            from repro.wsi.subscribers import (InferenceSubscriber,
+                                               ValidationService)
+
+            self.quarantine = self.store.bucket(quarantine_bucket)
+            self.validator = ValidationService(self.store_service,
+                                               self.quarantine)
+            self.ml_subscriber = InferenceSubscriber(self.store_service)
 
     # ---- subscription push endpoint → service --------------------------
     def _endpoint(self, msg: Message, ctx: DeliveryCtx):
         self.service.receive(msg.data, lambda ok: ctx.ack() if ok else
                              ctx.nack("conversion failed"))
 
+    # ---- dicom bucket → enterprise store ingest -------------------------
+    def _store_endpoint(self, msg: Message, ctx: DeliveryCtx):
+        try:
+            archive = self.dicom.get(msg.data["name"]).data
+            self.store_service.store_study_archive(msg.data["name"], archive)
+        except Exception as exc:  # corrupt archive / racing delete → DLQ path
+            ctx.nack(f"store ingest failed: {exc}")
+        else:
+            ctx.ack()
+
     # ---- the worker ------------------------------------------------------
+    def _store_study(self, source_key: str, generation: str,
+                     dcm_bytes: bytes) -> str:
+        """Write a converted study under a collision-safe output key.
+
+        The base key strips only the basename's trailing extension
+        (``derive_out_key``), so distinct sources that share a stem
+        (``a.svs`` vs ``a.tiff``) contend for the same base key. The first
+        source keeps it; any other source gets a stable per-source suffix.
+        A redelivered or re-uploaded source always maps back to its own
+        key (idempotent re-conversion), never onto another source's study.
+        Claims are recorded in an in-memory map under a short lock — only
+        the decision is serialized; the (expensive, content-hashing,
+        notification-fanning) bucket put runs outside it.
+        """
+        base = out_key = derive_out_key(source_key)
+        with self._out_lock:
+            owner = self._out_claims.get(base)
+            if owner is None and self.dicom.exists(base):
+                # pre-existing study from before this process claimed it
+                owner = self.dicom.get(base).metadata.get("source_key")
+            if owner not in (None, source_key):
+                self.metrics.inc("pipeline.out_key_collisions")
+                digest = hashlib.sha256(source_key.encode()).hexdigest()[:8]
+                out_key = f"{base[:-len('.dcm')]}-{digest}.dcm"
+            self._out_claims[out_key] = source_key
+        self.dicom.put(out_key, dcm_bytes,
+                       metadata={"source_generation": generation,
+                                 "source_key": source_key})
+        return out_key
+
     def _work(self, event: dict):
         if self.convert is None:  # simulation: return the service time
             st = self.service_time
@@ -99,11 +196,10 @@ class ConversionPipeline:
         # real mode: download → convert → upload (idempotent, content-addressed)
         obj = self.landing.get(event["name"])
         dcm_bytes = self.convert(obj.data, dict(obj.metadata))
-        out_key = event["name"].rsplit(".", 1)[0] + ".dcm"
-        self.dicom.put(out_key, dcm_bytes,
-                       metadata={"source_generation": obj.generation})
+        out_key = self._store_study(event["name"], obj.generation, dcm_bytes)
         with self._converted_lock:
             self.converted.append(out_key)
+            self._conversions.append((event["name"], out_key))
         return None
 
     # ---- ingestion --------------------------------------------------------
@@ -120,31 +216,38 @@ class ConversionPipeline:
         Blocks (wall clock — use with ``RealScheduler``) until every
         slide's study tar is durably in the DICOM store, then returns
         ``{landing key: study tar bytes}``. Completion is judged by
-        *successful* conversions (``self.converted``), not the service's
-        completion metric, which also counts failed attempts that the
-        subscription will still redeliver. Raises ``TimeoutError`` if the
-        batch does not finish within ``timeout`` seconds.
+        *successful* conversions recorded per source key
+        (``self._conversions``), not the service's completion metric,
+        which also counts failed attempts that the subscription will
+        still redeliver. Raises ``ValueError`` up front if two batch
+        inputs derive the same output key (``a.svs`` + ``a.tiff``), and
+        ``TimeoutError`` if the batch does not finish within ``timeout``
+        seconds.
         """
-        out_keys = {k: k.rsplit(".", 1)[0] + ".dcm" for k in slides}
+        dupes = sorted(k for k, n in
+                       Counter(map(derive_out_key, slides)).items() if n > 1)
+        if dupes:
+            raise ValueError(
+                "batch inputs collide on output keys "
+                f"{dupes} — rename the conflicting slides")
         # only conversions recorded after this call started count, so a
         # reused pipeline can't satisfy a new batch with stale studies
         with self._converted_lock:
-            start = len(self.converted)
+            start = len(self._conversions)
         for key, data in slides.items():
             meta = (metadata or {}).get(key, {"slide_id": key})
             self.ingest(key, data, meta)
-        done: set[str] = set()
+        done: dict[str, str] = {}
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:
             with self._converted_lock:
-                done = set(self.converted[start:])
-            if all(v in done for v in out_keys.values()):
-                return {k: self.dicom.get(v).data
-                        for k, v in out_keys.items()}
+                done = dict(self._conversions[start:])
+            if all(k in done for k in slides):
+                return {k: self.dicom.get(done[k]).data for k in slides}
             time.sleep(poll)
         raise TimeoutError(
             f"batch conversion incomplete after {timeout}s "
-            f"({len(done & set(out_keys.values()))}/{len(out_keys)} "
+            f"({len(set(done) & set(slides))}/{len(slides)} "
             "studies stored)")
 
     # ---- reporting -------------------------------------------------------

@@ -1,7 +1,8 @@
 """WSI→DICOM conversion substrate: synthetic slides, pyramid, JPEG, DICOM."""
 from repro.wsi.convert import ConvertOptions, convert_wsi_to_dicom, study_levels  # noqa: F401
-from repro.wsi.dicom import read_part10, write_part10  # noqa: F401
+from repro.wsi.dicom import Part10Index, read_part10, write_part10  # noqa: F401
 from repro.wsi.jpeg import (decode_tile, encode_coef_batch,  # noqa: F401
                             encode_tile, encode_tiles_batch, psnr)
 from repro.wsi.slide import PSVReader, SyntheticScanner  # noqa: F401
 from repro.wsi.store_service import DicomStoreService  # noqa: F401
+from repro.wsi.subscribers import InferenceSubscriber, ValidationService  # noqa: F401

@@ -13,7 +13,7 @@ import struct
 import uuid
 
 __all__ = [
-    "Dataset", "write_part10", "read_part10",
+    "Dataset", "Part10Index", "write_part10", "read_part10",
     "SOP_CLASS_VL_WSM", "TS_EXPLICIT_LE", "TS_JPEG_BASELINE", "new_uid",
 ]
 
@@ -186,18 +186,54 @@ def write_part10(
 def read_part10(data: bytes) -> tuple[Dataset, list[bytes]]:
     """Parse a Part-10 file produced by ``write_part10``.
 
-    Returns (dataset incl. file meta, pixel-data frames). Truncated or
-    otherwise malformed input raises ``ValueError("corrupt Part-10 …")``
-    instead of leaking ``struct.error`` / ``UnicodeDecodeError`` from the
-    element loop.
+    Returns (dataset incl. file meta, pixel-data frames), materializing
+    every frame — a thin wrapper over :class:`Part10Index`, which owns the
+    single structural pass (and therefore the single copy of the
+    corruption checks: truncated/malformed input raises
+    ``ValueError("corrupt Part-10 …")`` from the scan).
     """
-    if len(data) < 132 or data[128:132] != b"DICM":
-        raise ValueError("corrupt Part-10 stream: missing DICM magic")
-    pos = 132
+    idx = Part10Index(data)
     ds = Dataset()
-    frames: list[bytes] = []
-    n = len(data)
-    try:
+    for (g, e), (vr, off, ln) in idx.elements.items():
+        ds.elements[(g, e)] = (vr, data[off : off + ln])
+    return ds, [idx.read_frame(i) for i in range(idx.n_frames)]
+
+
+class Part10Index:
+    """Offset index over a Part-10 byte stream — parse once, seek forever.
+
+    One scan over ``data`` records every element's (VR, value offset, value
+    length) and the pixel-data frame geometry — encapsulated fragment
+    extents cross-checked against the basic offset table, or the native
+    frame stride — **without materializing any frame**. After construction,
+    ``read_element`` and ``read_frame(i)`` are single slices of the raw
+    bytes: a frame fetch costs O(frame size), not O(file size) as with
+    ``read_part10``, which is what makes frame-level WADO on a cached index
+    cheap (see ``DicomStoreService.retrieve_frame``).
+
+    Malformed input raises ``ValueError("corrupt Part-10 …")`` exactly like
+    ``read_part10``; additionally a basic offset table whose length is not a
+    multiple of 4, or whose entries disagree with the actual fragment
+    positions, is rejected.
+    """
+
+    def __init__(self, data: bytes):
+        if len(data) < 132 or data[128:132] != b"DICM":
+            raise ValueError("corrupt Part-10 stream: missing DICM magic")
+        self.data = data
+        # (group, elem) -> (vr, value offset, value length)
+        self.elements: dict[tuple[int, int], tuple[str, int, int]] = {}
+        self.frames: list[tuple[int, int]] = []  # (offset, length)
+        self.encapsulated = False
+        try:
+            self._scan()
+        except (struct.error, UnicodeDecodeError) as exc:
+            raise ValueError(f"corrupt Part-10 stream: {exc}") from None
+
+    # ---- the single structural pass --------------------------------------
+    def _scan(self) -> None:
+        data, n = self.data, len(self.data)
+        pos = 132
         while pos < n:
             g, e = struct.unpack_from("<HH", data, pos)
             pos += 4
@@ -213,45 +249,130 @@ def read_part10(data: bytes) -> tuple[Dataset, list[bytes]]:
                 ln = struct.unpack_from("<H", data, pos + 2)[0]
                 pos += 4
             if (g, e) == (0x7FE0, 0x0010):
-                if ln == 0xFFFFFFFF:  # encapsulated
-                    items = []
-                    while True:
-                        ig, ie, il = struct.unpack_from("<HHI", data, pos)
-                        pos += 8
-                        if (ig, ie) == (0xFFFE, 0xE0DD):
-                            break
-                        if (ig, ie) != (0xFFFE, 0xE000) or pos + il > n:
-                            raise ValueError(
-                                "corrupt Part-10 stream: bad pixel-data "
-                                f"item at offset {pos - 8}")
-                        items.append(data[pos : pos + il])
-                        pos += il
-                    frames = items[1:]  # drop basic offset table
-                else:
-                    if pos + ln > n:
-                        raise ValueError(
-                            "corrupt Part-10 stream: pixel data truncated")
-                    blob = data[pos : pos + ln]
-                    pos += ln
-                    nf = ds.get_int(0x0028, 0x0008) or 1
-                    rows = ds.get_int(0x0028, 0x0010)
-                    cols = ds.get_int(0x0028, 0x0011)
-                    spp = ds.get_int(0x0028, 0x0002) or 1
-                    if not rows or not cols:
-                        raise ValueError(
-                            "corrupt Part-10 stream: native pixel data "
-                            "without Rows/Columns")
-                    fsize = rows * cols * spp
-                    frames = [blob[i * fsize : (i + 1) * fsize]
-                              for i in range(nf)]
+                pos = self._scan_pixel_data(pos, ln)
                 continue
             if pos + ln > n:
                 raise ValueError(
                     f"corrupt Part-10 stream: element ({g:04x},{e:04x}) "
                     "value truncated")
-            ds.elements[(g, e)] = (vr, data[pos : pos + ln])
+            self.elements[(g, e)] = (vr, pos, ln)
             pos += ln
-    except (struct.error, UnicodeDecodeError) as exc:
-        raise ValueError(
-            f"corrupt Part-10 stream: {exc}") from None
-    return ds, frames
+
+    def _scan_pixel_data(self, pos: int, ln: int) -> int:
+        data, n = self.data, len(self.data)
+        if ln != 0xFFFFFFFF:  # native: frames are a fixed stride into blob
+            if pos + ln > n:
+                raise ValueError(
+                    "corrupt Part-10 stream: pixel data truncated")
+            nf = self.get_int(0x0028, 0x0008) or 1
+            rows = self.get_int(0x0028, 0x0010)
+            cols = self.get_int(0x0028, 0x0011)
+            spp = self.get_int(0x0028, 0x0002) or 1
+            if not rows or not cols:
+                raise ValueError(
+                    "corrupt Part-10 stream: native pixel data without "
+                    "Rows/Columns")
+            fsize = rows * cols * spp
+            if nf * fsize > ln:
+                raise ValueError(
+                    "corrupt Part-10 stream: native pixel data shorter "
+                    f"than {nf} frames of {fsize} bytes")
+            self.frames = [(pos + i * fsize, fsize) for i in range(nf)]
+            return pos + ln
+        # encapsulated: basic offset table item, then one fragment per frame
+        self.encapsulated = True
+        ig, ie, il = struct.unpack_from("<HHI", data, pos)
+        pos += 8
+        if (ig, ie) != (0xFFFE, 0xE000) or pos + il > n:
+            raise ValueError(
+                "corrupt Part-10 stream: missing basic offset table item")
+        if il % 4:
+            raise ValueError(
+                "corrupt Part-10 stream: basic offset table length "
+                f"{il} is not a multiple of 4")
+        bot = list(struct.unpack_from(f"<{il // 4}I", data, pos))
+        pos += il
+        offsets = []  # of each fragment's item header, relative to the first
+        first = pos
+        while True:
+            ig, ie, il = struct.unpack_from("<HHI", data, pos)
+            pos += 8
+            if (ig, ie) == (0xFFFE, 0xE0DD):
+                break
+            if (ig, ie) != (0xFFFE, 0xE000) or pos + il > n:
+                raise ValueError(
+                    "corrupt Part-10 stream: bad pixel-data item at "
+                    f"offset {pos - 8}")
+            offsets.append(pos - 8 - first)
+            self.frames.append((pos, il))
+            pos += il
+        if bot and bot != offsets:
+            raise ValueError(
+                "corrupt Part-10 stream: basic offset table disagrees "
+                f"with fragment positions ({bot} != {offsets})")
+        return pos
+
+    # ---- seeks -------------------------------------------------------------
+    @property
+    def n_frames(self) -> int:
+        return len(self.frames)
+
+    def read_element(self, group: int, elem: int) -> bytes | None:
+        """Raw value bytes of one element (None if absent) — a single slice."""
+        v = self.elements.get((group, elem))
+        if v is None:
+            return None
+        _, off, ln = v
+        return self.data[off : off + ln]
+
+    def get_str(self, group: int, elem: int) -> str | None:
+        raw = self.read_element(group, elem)
+        return raw.decode(errors="replace").rstrip(" \x00") \
+            if raw is not None else None
+
+    def get_int(self, group: int, elem: int) -> int | None:
+        v = self.elements.get((group, elem))
+        if v is None:
+            return None
+        vr, off, ln = v
+        raw = self.data[off : off + ln]
+        if vr == "US":
+            return struct.unpack("<H", raw[:2])[0]
+        if vr == "UL":
+            return struct.unpack("<I", raw[:4])[0]
+        return int(raw.decode().strip() or 0)
+
+    def read_frame(self, i: int) -> bytes:
+        """Frame ``i``'s bytes — byte-identical to ``read_part10(...)[1][i]``
+        but O(frame size): one slice at the indexed offset."""
+        if not 0 <= i < len(self.frames):
+            raise IndexError(
+                f"frame {i} out of range (instance has {len(self.frames)})")
+        off, ln = self.frames[i]
+        return self.data[off : off + ln]
+
+    # ---- integrity ---------------------------------------------------------
+    def verify(self) -> None:
+        """Deep integrity checks beyond the structural scan.
+
+        Raises ``ValueError("corrupt Part-10 …")`` if the declared frame
+        count disagrees with the indexed frames, identity elements are
+        missing, or (encapsulated JPEG) a frame does not start with an SOI
+        marker — the bit-rot class the validation subscriber quarantines.
+        """
+        for g, e, what in ((0x0008, 0x0018, "SOP instance UID"),
+                           (0x0020, 0x000D, "study UID"),
+                           (0x0020, 0x000E, "series UID")):
+            if not self.get_str(g, e):
+                raise ValueError(f"corrupt Part-10 stream: missing {what}")
+        declared = self.get_int(0x0028, 0x0008)
+        if declared is not None and declared != len(self.frames):
+            raise ValueError(
+                f"corrupt Part-10 stream: {declared} frames declared, "
+                f"{len(self.frames)} indexed")
+        if self.encapsulated:
+            for i, (off, ln) in enumerate(self.frames):
+                if ln < 2 or self.data[off : off + 2] != b"\xff\xd8":
+                    raise ValueError(
+                        f"corrupt Part-10 stream: frame {i} lacks a JPEG "
+                        "SOI marker")

@@ -1,0 +1,167 @@
+"""Part10Index: O(1) frame seeks byte-identical to the full parser, plus
+structural/BOT corruption rejection and deep verify() checks."""
+import struct
+
+import numpy as np
+import pytest
+
+from repro.wsi import (PSVReader, Part10Index, SyntheticScanner, encode_tile,
+                       read_part10, write_part10)
+from repro.wsi.dicom import TS_EXPLICIT_LE, TS_JPEG_BASELINE
+
+_PIXEL_HDR = (struct.pack("<HH", 0x7FE0, 0x0010) + b"OB\x00\x00"
+              + struct.pack("<I", 0xFFFFFFFF))
+
+
+def _encapsulated(n_frames=4, seed=4):
+    rd = PSVReader(SyntheticScanner(seed=seed).scan(512, 512, 256))
+    bh, bw = rd.grid
+    jpgs = [encode_tile(rd.read_tile(r, c)[:64, :64])
+            for r in range(bh) for c in range(bw)]
+    frames = [jpgs[i % len(jpgs)] for i in range(n_frames)]
+    return write_part10(frames=frames, rows=64, cols=64, total_rows=256,
+                        total_cols=256, transfer_syntax=TS_JPEG_BASELINE)
+
+
+def _native(frame_hw=3, n_frames=3, seed=7):
+    rng = np.random.default_rng(seed)
+    frames = [rng.integers(0, 255, (frame_hw, frame_hw, 3),
+                           dtype=np.uint8).tobytes() for _ in range(n_frames)]
+    return write_part10(frames=frames, rows=frame_hw, cols=frame_hw,
+                        total_rows=frame_hw * n_frames, total_cols=frame_hw,
+                        transfer_syntax=TS_EXPLICIT_LE)
+
+
+# --------------------------------------------------------------------------
+# byte identity with read_part10
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n_frames", [1, 4, 16])
+def test_encapsulated_frames_byte_identical(n_frames):
+    blob = _encapsulated(n_frames)
+    idx = Part10Index(blob)
+    _, frames = read_part10(blob)
+    assert idx.encapsulated and idx.n_frames == n_frames == len(frames)
+    assert [idx.read_frame(i) for i in range(n_frames)] == frames
+
+
+def test_native_frames_byte_identical():
+    blob = _native(frame_hw=64, n_frames=4)
+    idx = Part10Index(blob)
+    _, frames = read_part10(blob)
+    assert not idx.encapsulated
+    assert [idx.read_frame(i) for i in range(4)] \
+        == [bytes(f) for f in frames]
+
+
+def test_native_odd_length_padded_frames_byte_identical():
+    """27-byte frames: blob is odd → even-padded; pad stays outside frames."""
+    blob = _native(frame_hw=3, n_frames=3)
+    assert len(blob) % 2 == 0
+    idx = Part10Index(blob)
+    _, frames = read_part10(blob)
+    assert [idx.read_frame(i) for i in range(3)] \
+        == [bytes(f) for f in frames]
+    assert all(len(idx.read_frame(i)) == 27 for i in range(3))
+
+
+def test_elements_match_full_parser():
+    blob = _encapsulated(2)
+    idx = Part10Index(blob)
+    ds, _ = read_part10(blob)
+    for (g, e), (vr, raw) in ds.elements.items():
+        assert idx.read_element(g, e) == raw
+        assert idx.get_str(g, e) == ds.get_str(g, e)
+    assert idx.get_int(0x0028, 0x0008) == 2
+    assert idx.get_int(0x0048, 0x0007) == 256
+    assert idx.read_element(0x4242, 0x4242) is None
+
+
+def test_read_frame_out_of_range():
+    idx = Part10Index(_encapsulated(2))
+    with pytest.raises(IndexError, match="out of range"):
+        idx.read_frame(2)
+
+
+# --------------------------------------------------------------------------
+# corruption rejection
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("mangle", [
+    lambda b: b"",                          # empty input
+    lambda b: b[:100],                      # shorter than the preamble
+    lambda b: b[:128] + b"DICX" + b[132:],  # wrong magic
+    lambda b: b[: len(b) // 2],             # truncated mid-dataset
+    lambda b: b[:-16],                      # truncated inside pixel data
+])
+def test_index_rejects_corrupt_streams(mangle):
+    with pytest.raises(ValueError, match="corrupt Part-10"):
+        Part10Index(mangle(_encapsulated(2)))
+
+
+def _bot_offset(blob: bytes) -> int:
+    """Offset of the basic-offset-table *item header* in ``blob``."""
+    return blob.index(_PIXEL_HDR) + len(_PIXEL_HDR)
+
+
+def test_index_rejects_bot_entry_mismatch():
+    blob = bytearray(_encapsulated(2))
+    struct.pack_into("<I", blob, _bot_offset(blob) + 8, 0xDEAD)  # entry 0
+    with pytest.raises(ValueError, match="corrupt Part-10.*offset table"):
+        Part10Index(bytes(blob))
+
+
+def test_index_rejects_bot_length_not_multiple_of_4():
+    blob = bytearray(_encapsulated(2))
+    p = _bot_offset(blob)
+    il = struct.unpack_from("<I", blob, p + 4)[0]
+    struct.pack_into("<I", blob, p + 4, il + 2)
+    with pytest.raises(ValueError, match="corrupt Part-10.*multiple of 4"):
+        Part10Index(bytes(blob))
+
+
+def test_index_rejects_bot_entry_count_mismatch():
+    blob = bytearray(_encapsulated(2))
+    p = _bot_offset(blob)
+    struct.pack_into("<I", blob, p + 4, 4)  # claim 1 entry; 2 fragments
+    with pytest.raises(ValueError, match="corrupt Part-10"):
+        Part10Index(bytes(blob))
+
+
+def test_index_rejects_native_pixel_data_shorter_than_frames():
+    blob = bytearray(_native(frame_hw=4, n_frames=2))
+    idx = Part10Index(bytes(blob))  # valid: locate NumberOfFrames
+    vr, off, ln = idx.elements[(0x0028, 0x0008)]
+    blob[off:off + ln] = b"9".ljust(ln)  # declare 9 frames, blob holds 2
+    with pytest.raises(ValueError, match="corrupt Part-10.*shorter"):
+        Part10Index(bytes(blob))
+
+
+# --------------------------------------------------------------------------
+# verify(): deep checks past the structural scan
+# --------------------------------------------------------------------------
+def test_verify_passes_on_clean_instances():
+    Part10Index(_encapsulated(4)).verify()
+    Part10Index(_native()).verify()
+
+
+def test_verify_catches_rotted_jpeg_frame():
+    blob = bytearray(_encapsulated(4))
+    off, _ = Part10Index(bytes(blob)).frames[2]
+    blob[off:off + 2] = b"\x00\x00"  # destroy the SOI marker
+    with pytest.raises(ValueError, match="corrupt Part-10.*SOI"):
+        Part10Index(bytes(blob)).verify()
+
+
+def test_verify_catches_missing_sop_uid():
+    blob = bytearray(_encapsulated(2))
+    vr, off, ln = Part10Index(bytes(blob)).elements[(0x0008, 0x0018)]
+    blob[off:off + ln] = b"\x00" * ln
+    with pytest.raises(ValueError, match="corrupt Part-10.*SOP instance"):
+        Part10Index(bytes(blob)).verify()
+
+
+def test_verify_catches_frame_count_mismatch():
+    blob = bytearray(_encapsulated(2))
+    vr, off, ln = Part10Index(bytes(blob)).elements[(0x0028, 0x0008)]
+    blob[off:off + ln] = b"3".ljust(ln)  # declares 3, stream holds 2
+    with pytest.raises(ValueError, match="corrupt Part-10.*declared"):
+        Part10Index(bytes(blob)).verify()
