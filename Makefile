@@ -11,9 +11,11 @@ test:
 verify: test
 
 # CPU byte-identity smoke: the conversion benchmark with --fast asserts
-# per-tile ≡ batched ≡ pipelined ≡ concurrent output bytes on small slides,
-# and the store benchmark asserts indexed-WADO byte identity + ≥10x plus
-# re-STOW / crash-rebuild QIDO/WADO identity
+# per-tile ≡ batched ≡ pipelined ≡ concurrent output bytes on small slides
+# AND runs the mixed-format batch (PSV + tiled-TIFF deliveries of the same
+# pixels through one sniffing deployment must emit byte-identical study
+# tars); the store benchmark asserts indexed-WADO byte identity + ≥10x
+# plus re-STOW / crash-rebuild QIDO/WADO identity
 smoke:
 	python -m benchmarks.convert_bench --fast
 	python -m benchmarks.store_bench --fast

@@ -52,6 +52,23 @@ def render(bench: dict) -> str:
         f"All paths emit byte-identical study tars "
         f"(asserted in the run: {ms['bytes_identical']}).",
     ]
+    mx = bench.get("mixed_format")
+    if mx:
+        per_fmt = ", ".join(f"{n} {f}" for f, n in
+                            sorted(mx["formats_converted"].items()))
+        lines += [
+            "",
+            f"Mixed-format landing bucket ({mx['n_slides']} × {mx['hw']}² "
+            f"slides: {per_fmt}; 1 instance × concurrency "
+            f"{mx['concurrency']}):",
+            "",
+            "| metric | value |",
+            "|---|---|",
+            f"| batch wall (s) | {mx['batch_s']:.3f} |",
+            f"| throughput (MPix/s) | {mx['mpix_s']:.2f} |",
+            f"| PSV vs TIFF study tars byte-identical | "
+            f"{mx['cross_format_bytes_identical']} |",
+        ]
     return "\n".join(lines)
 
 

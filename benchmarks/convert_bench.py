@@ -16,6 +16,11 @@ Multi-slide section (the paper's batch-conversion scenario):
   event-driven wiring (landing bucket → pub/sub → autoscaled service →
   DICOM store) with ``concurrency`` parallel real conversions per instance.
 
+Mixed-format section (the paper's scanner-interoperability scenario):
+every slide delivered twice — as PSV and as SVS-shaped tiled TIFF — into
+one landing bucket served by one sniffing deployment; each pair's study
+tars are asserted byte-identical.
+
 Byte-identity is asserted across all three: every study tar (UIDs seeded
 per slide) must be identical bit-for-bit, so the speedups cannot come from
 computing something different.
@@ -44,6 +49,8 @@ from repro.wsi.convert import ConvertOptions, convert_wsi_to_dicom
 from repro.wsi.dicom import TS_JPEG_BASELINE, new_uid, write_part10
 from repro.wsi.jpeg import encode_coef_batch, encode_tile, encode_tiles_batch
 from repro.wsi.slide import PSVReader, SyntheticScanner
+
+MIXED_FORMATS = ("psv", "tiff")
 
 SLIDE, TILE = 1024, 256
 
@@ -229,6 +236,64 @@ def _multi_slide(n_slides: int, slide: int, reps: int,
     }
 
 
+def _mixed_format(n_slides: int, slide: int,
+                  concurrency: int | None = None) -> dict:
+    """The mixed-format landing bucket: every slide rendered once, delivered
+    twice — as PSV and as SVS-shaped tiled TIFF — through the real
+    event-driven wiring. One deployment sniffs and serves both containers,
+    and each PSV/TIFF pair (same pixels, seeded UIDs) must produce
+    byte-identical study tars, so format support cannot come from a
+    different compute path."""
+    if concurrency is None:
+        concurrency = max(1, (os.cpu_count() or 2) // 2)
+    scanners = {f"s{i}": SyntheticScanner(seed=300 + i)
+                for i in range(n_slides)}
+    slides, metadata = {}, {}
+    container_bytes = {f: 0 for f in MIXED_FORMATS}
+    for sid, sc in scanners.items():
+        for fmt in MIXED_FORMATS:
+            blob = (sc.scan(slide, slide, TILE) if fmt == "psv"
+                    else sc.scan_tiff(slide, slide, TILE))
+            key = f"{fmt}/{sid}.{fmt}"
+            slides[key] = blob
+            metadata[key] = {"slide_id": sid}
+            container_bytes[fmt] += len(blob)
+    uids = {sid: json.dumps([new_uid(), new_uid()]) for sid in scanners}
+
+    def convert(data, meta):
+        opt = ConvertOptions(manifest={"uids": uids[meta["slide_id"]]})
+        return convert_wsi_to_dicom(data, {"slide_id": meta["slide_id"]},
+                                    options=opt)
+
+    convert(next(iter(slides.values())), {"slide_id": "s0"})  # warm jit
+    sched = RealScheduler(workers=2 * concurrency)
+    pipe = ConversionPipeline(
+        sched, convert=convert, max_instances=1, concurrency=concurrency,
+        cold_start=0.0, scale_down_delay=5.0, subscribers=False,
+    )
+    t0 = time.perf_counter()
+    outs = pipe.run_batch(slides, metadata)
+    dt = time.perf_counter() - t0
+    sched.shutdown()
+    for sid in scanners:
+        assert outs[f"psv/{sid}.psv"] == outs[f"tiff/{sid}.tiff"], \
+            f"{sid}: TIFF study tar diverges from the PSV delivery"
+    fmt_counts = {f: int(pipe.metrics.counters[f"pipeline.format.{f}"])
+                  for f in MIXED_FORMATS}
+    assert fmt_counts == {f: n_slides for f in MIXED_FORMATS}
+    mpix = len(slides) * slide * slide / 1e6
+    return {
+        "n_slides": len(slides),
+        "hw": slide,
+        "concurrency": concurrency,
+        "formats_converted": fmt_counts,
+        "container_bytes": container_bytes,
+        "batch_s": dt,
+        "mpix_s": mpix / dt,
+        "cross_format_bytes_identical": True,
+    }
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
@@ -241,7 +306,8 @@ def main(argv: list[str] | None = None) -> None:
 
     single = _single_slide(slide, reps)
     multi = _multi_slide(n_slides, slide, reps)
-    result = {**single, "multi_slide": multi}
+    mixed = _mixed_format(2 if args.fast else 3, slide)
+    result = {**single, "multi_slide": multi, "mixed_format": mixed}
     with open("BENCH_convert.json", "w") as f:
         json.dump(result, f, indent=2)
 
@@ -266,6 +332,11 @@ def main(argv: list[str] | None = None) -> None:
     print(f"batch_concurrent_s,{ms['concurrent_s']:.3f},"
           f"speedup={ms['concurrent_speedup']:.2f}x "
           f"identical={ms['bytes_identical']}")
+    mx = mixed
+    print(f"mixed_format_batch_s,{mx['batch_s']:.3f},"
+          f"{mx['n_slides']}slides:" +
+          "+".join(f"{n}x{f}" for f, n in mx['formats_converted'].items()) +
+          f" cross_format_identical={mx['cross_format_bytes_identical']}")
     print("wrote BENCH_convert.json")
 
 

@@ -1,21 +1,24 @@
-"""Quickstart: one slide through the full event-driven conversion pipeline.
+"""Quickstart: a mixed-format batch through the event-driven pipeline.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Scans a synthetic proprietary-format (PSV) slide, drops it in the landing
-bucket, and lets the event chain do the rest: object-creation notification →
-pub/sub topic → push subscription → autoscaled converter (the pipelined
+Scans one synthetic slide and drops it in the landing bucket **twice** —
+as the scanner's proprietary PSV container and as an SVS-shaped tiled
+TIFF — then lets the event chain do the rest: object-creation
+notification → pub/sub topic → push subscription → autoscaled converter
+(which sniffs each container by magic bytes and runs the pipelined
 JAX/Pallas transform + host Huffman engine) → DICOM-store bucket → store
 ingest → enterprise DICOM store → validation + ML-inference subscribers.
-Then reads the DICOM study back and verifies it.
+Then reads the DICOM studies back and verifies them.
 
-Expected output: the PSV byte count, the converted study in the DICOM
-store (one .dcm per pyramid level — a 512² slide yields 2 levels), each
-level's dimensions/frame count/transfer syntax, a level-0 PSNR in the
-30–40 dB range against the scanner's pixels, the enterprise store's QIDO
-view of the study with the validation verdict and the mock ML model's
-frame scores (fetched via indexed frame-level WADO), the pipeline's
-metric counters, and a final "quickstart OK".
+Expected output: both container byte counts, two converted studies in the
+DICOM store (one .dcm per pyramid level — a 512² slide yields 2 levels),
+each level's dimensions/frame count/transfer syntax, a level-0 PSNR in
+the 30–40 dB range against the scanner's pixels, the enterprise store's
+QIDO view of the studies with the validation verdicts and the mock ML
+model's frame scores (fetched via indexed frame-level WADO), the
+pipeline's metric counters (note ``pipeline.format.psv`` and
+``pipeline.format.tiff``), and a final "quickstart OK".
 """
 import sys
 from pathlib import Path
@@ -28,20 +31,23 @@ from repro.wsi import (PSVReader, SyntheticScanner, convert_wsi_to_dicom,
 
 
 def main():
-    print("== scanner: producing a 512x512 PSV slide (4 tiles) ==")
+    print("== scanner: one 512x512 slide (4 tiles), two containers ==")
     scanner = SyntheticScanner(seed=7)
     psv = scanner.scan(512, 512, 256)
-    print(f"   PSV container: {len(psv):,} bytes")
+    tif = scanner.scan_tiff(512, 512, 256)
+    print(f"   PSV container:        {len(psv):,} bytes")
+    print(f"   tiled-TIFF container: {len(tif):,} bytes")
 
-    print("== pipeline: landing bucket → pub/sub → autoscaled converter ==")
+    print("== pipeline: mixed landing bucket → pub/sub → sniffing converter ==")
     sched = RealScheduler(workers=2)
     pipe = ConversionPipeline(
         sched, convert=lambda data, meta: convert_wsi_to_dicom(data, meta),
         max_instances=2, cold_start=0.0, scale_down_delay=2.0,
     )
     pipe.ingest("slides/quickstart.psv", psv, {"slide_id": "QS-1"})
+    pipe.ingest("slides/quickstart-tiff.svs", tif, {"slide_id": "QS-2"})
     sched.run(until=300.0)
-    assert pipe.done_count() == 1, "conversion did not finish"
+    assert pipe.done_count() == 2, "conversions did not finish"
 
     print("== DICOM store contents ==")
     for key in pipe.dicom.list():

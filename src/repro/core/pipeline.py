@@ -66,6 +66,8 @@ class ConversionPipeline:
         scale_down_delay: float = 120.0,
         ack_deadline: float = 600.0,
         max_delivery_attempts: int = 5,
+        min_backoff: float = 10.0,
+        max_backoff: float = 600.0,
         hedge_after: float | None = None,
         landing_bucket: str = "wsi-landing",
         dicom_bucket: str = "dicom-store",
@@ -106,13 +108,23 @@ class ConversionPipeline:
             self.topic, "wsi2dcm-push", self._endpoint,
             ack_deadline=ack_deadline,
             max_delivery_attempts=max_delivery_attempts,
+            min_backoff=min_backoff, max_backoff=max_backoff,
             hedge_after=hedge_after, dlq=self.dlq,
         )
         self.converted: list[str] = []
         self._conversions: list[tuple[str, str]] = []  # (source, out key)
         self._converted_lock = threading.Lock()
+        # wakes run_batch on every conversion or dead-letter (no busy-poll)
+        self._batch_cond = threading.Condition(self._converted_lock)
+        self._errors: dict[str, str] = {}  # source key -> last failure
+        self.dead_lettered: list[tuple[dict, str]] = []  # (event, dlq_reason)
         self._out_lock = threading.Lock()  # serializes out-key claims
         self._out_claims: dict[str, str] = {}  # out key -> source key
+        # permanent-failure visibility: a sink on the conversion DLQ records
+        # the poisoned event + reason so run_batch can fail fast instead of
+        # spinning out its timeout
+        self.dlq_sink = Subscription(self.dlq, "wsi2dcm-dlq-sink",
+                                     self._dlq_endpoint)
 
         # --- enterprise DICOM store + downstream subscribers ----------------
         # (the Figure-1 final arrow, itself event-driven: study tar lands in
@@ -145,8 +157,27 @@ class ConversionPipeline:
 
     # ---- subscription push endpoint → service --------------------------
     def _endpoint(self, msg: Message, ctx: DeliveryCtx):
-        self.service.receive(msg.data, lambda ok: ctx.ack() if ok else
-                             ctx.nack("conversion failed"))
+        def done(ok: bool):
+            if ok:
+                ctx.ack()
+                return
+            with self._converted_lock:
+                reason = self._errors.get(msg.data.get("name"),
+                                          "conversion failed")
+            ctx.nack(reason)
+
+        self.service.receive(msg.data, done)
+
+    # ---- conversion DLQ sink ---------------------------------------------
+    def _dlq_endpoint(self, msg: Message, ctx: DeliveryCtx):
+        with self._batch_cond:
+            self.dead_lettered.append(
+                (msg.data, msg.attributes.get("dlq_reason", "")))
+            # the failure is now settled: drop the recorded error so a
+            # later re-ingest of the same key can't report a stale reason
+            self._errors.pop(msg.data.get("name"), None)
+            self._batch_cond.notify_all()
+        ctx.ack()
 
     # ---- dicom bucket → enterprise store ingest -------------------------
     def _store_endpoint(self, msg: Message, ctx: DeliveryCtx):
@@ -193,13 +224,35 @@ class ConversionPipeline:
         if self.convert is None:  # simulation: return the service time
             st = self.service_time
             return st(event) if callable(st) else float(st)
-        # real mode: download → convert → upload (idempotent, content-addressed)
-        obj = self.landing.get(event["name"])
-        dcm_bytes = self.convert(obj.data, dict(obj.metadata))
+        # real mode: download → sniff → convert → upload (idempotent,
+        # content-addressed). One deployment serves a mixed landing bucket:
+        # the container format is resolved from the object's magic bytes
+        # (never the key), so .psv/.tiff/.svs slides all route through the
+        # same converter; unknown containers fail with the actionable sniff
+        # error, which becomes the nack reason and, after the retry budget,
+        # the dead-letter's dlq_reason.
+        # imported lazily (like the store service) so simulation-only use of
+        # repro.core never pays the repro.wsi/jax import
+        from repro.wsi.formats import sniff
+
+        try:
+            obj = self.landing.get(event["name"])
+            fmt = sniff(obj.data)
+            self.metrics.inc(f"pipeline.format.{fmt}")
+            meta = dict(obj.metadata)
+            meta.setdefault("format", fmt)
+            dcm_bytes = self.convert(obj.data, meta)
+        except Exception as exc:
+            with self._converted_lock:
+                self._errors[event["name"]] = \
+                    f"{type(exc).__name__}: {exc}"
+            raise
         out_key = self._store_study(event["name"], obj.generation, dcm_bytes)
-        with self._converted_lock:
+        with self._batch_cond:
+            self._errors.pop(event["name"], None)
             self.converted.append(out_key)
             self._conversions.append((event["name"], out_key))
+            self._batch_cond.notify_all()
         return None
 
     # ---- ingestion --------------------------------------------------------
@@ -209,8 +262,7 @@ class ConversionPipeline:
 
     def run_batch(self, slides: dict[str, bytes],
                   metadata: dict[str, dict] | None = None, *,
-                  timeout: float = 600.0,
-                  poll: float = 0.002) -> dict[str, bytes]:
+                  timeout: float = 600.0) -> dict[str, bytes]:
         """Real-mode batch driver: ingest every slide, wait for the studies.
 
         Blocks (wall clock — use with ``RealScheduler``) until every
@@ -219,10 +271,15 @@ class ConversionPipeline:
         *successful* conversions recorded per source key
         (``self._conversions``), not the service's completion metric,
         which also counts failed attempts that the subscription will
-        still redeliver. Raises ``ValueError`` up front if two batch
-        inputs derive the same output key (``a.svs`` + ``a.tiff``), and
-        ``TimeoutError`` if the batch does not finish within ``timeout``
-        seconds.
+        still redeliver. The wait is a condition variable signalled by
+        every finished conversion and every dead-letter — no busy-poll.
+
+        Fails fast on permanent failures: the moment a batch slide is
+        dead-lettered (retry budget exhausted), raises ``RuntimeError``
+        carrying the ``dlq_reason`` instead of spinning out the timeout.
+        Raises ``ValueError`` up front if two batch inputs derive the
+        same output key (``a.svs`` + ``a.tiff``), and ``TimeoutError``
+        if the batch does not finish within ``timeout`` seconds.
         """
         dupes = sorted(k for k, n in
                        Counter(map(derive_out_key, slides)).items() if n > 1)
@@ -230,25 +287,34 @@ class ConversionPipeline:
             raise ValueError(
                 "batch inputs collide on output keys "
                 f"{dupes} — rename the conflicting slides")
-        # only conversions recorded after this call started count, so a
-        # reused pipeline can't satisfy a new batch with stale studies
+        # only conversions / dead-letters recorded after this call started
+        # count, so a reused pipeline can't satisfy a new batch with stale
+        # studies (or fail it on an old batch's poison slide)
         with self._converted_lock:
             start = len(self._conversions)
+            dead_start = len(self.dead_lettered)
         for key, data in slides.items():
             meta = (metadata or {}).get(key, {"slide_id": key})
             self.ingest(key, data, meta)
-        done: dict[str, str] = {}
         deadline = time.monotonic() + timeout
-        while time.monotonic() < deadline:
-            with self._converted_lock:
+        with self._batch_cond:
+            while True:
                 done = dict(self._conversions[start:])
-            if all(k in done for k in slides):
-                return {k: self.dicom.get(done[k]).data for k in slides}
-            time.sleep(poll)
-        raise TimeoutError(
-            f"batch conversion incomplete after {timeout}s "
-            f"({len(set(done) & set(slides))}/{len(slides)} "
-            "studies stored)")
+                if all(k in done for k in slides):
+                    break
+                for event, reason in self.dead_lettered[dead_start:]:
+                    if event.get("name") in slides:
+                        raise RuntimeError(
+                            f"slide {event['name']!r} dead-lettered: "
+                            f"{reason}")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"batch conversion incomplete after {timeout}s "
+                        f"({len(set(done) & set(slides))}/{len(slides)} "
+                        "studies stored)")
+                self._batch_cond.wait(timeout=remaining)
+        return {k: self.dicom.get(done[k]).data for k in slides}
 
     # ---- reporting -------------------------------------------------------
     def instance_series(self):

@@ -10,10 +10,17 @@ fault-tolerance claims rest on):
 * **push flow control** — at most ``max_outstanding`` in-flight deliveries
   per subscription; excess messages queue in the backlog,
 * **ordering keys** — messages sharing a key are delivered one-at-a-time in
-  publish order (per-key serialization),
+  publish order (per-key serialization). A nacked/expired keyed message
+  keeps its key reserved across the retry backoff (later messages cannot
+  overtake it); the key is released — and the per-key backlog drained — on
+  ack and on dead-letter, so a poison message stalls its key only until it
+  dead-letters, never forever,
 * **hedging** (straggler mitigation, beyond the paper's GCP defaults) — an
   optional duplicate delivery fires if no ack lands within ``hedge_after``;
-  consumers are idempotent so duplicates are harmless.
+  consumers are idempotent so duplicates are harmless. Whichever delivery
+  acks first settles the message; a duplicate's nack is recorded but never
+  touches the original delivery's outstanding entry, deadline timer, or
+  retry budget.
 
 The push endpoint is any callable ``endpoint(message, ctx)``; it reports
 completion via ``ctx.ack()`` / ``ctx.nack()`` (asynchronously is fine).
@@ -70,20 +77,37 @@ class DeliveryCtx:
     Settlement (ack / nack / deadline expiry) is atomic under the owning
     subscription's lock, so concurrent real-mode workers racing a deadline
     timer resolve to exactly one outcome.
+
+    A hedged duplicate carries ``hedge_of`` (the original delivery). It
+    settles *itself* only: its ack wins the race by acking the original
+    (which owns the outstanding entry and timers), and its nack is recorded
+    but deliberately touches nothing — the original is still in flight with
+    its own deadline and retry budget, so a failed duplicate must not pop
+    the original's outstanding entry or double-schedule a retry.
     """
 
-    def __init__(self, sub: "Subscription", msg: Message, attempt: int):
+    def __init__(self, sub: "Subscription", msg: Message, attempt: int,
+                 hedge_of: "DeliveryCtx | None" = None):
         self.sub, self.msg, self.attempt = sub, msg, attempt
+        self.hedge_of = hedge_of
         self.done = False
         self.deadline_handle = None
         self.hedge_handle = None
 
     def ack(self):
-        if self.sub._settle(self):
+        if not self.sub._settle(self):
+            return
+        if self.hedge_of is not None:
+            self.sub._on_hedge_ack(self)
+        else:
             self.sub._on_ack(self)
 
     def nack(self, reason: str = ""):
-        if self.sub._settle(self):
+        if not self.sub._settle(self):
+            return
+        if self.hedge_of is not None:
+            self.sub._on_hedge_nack(self, reason or "nack")
+        else:
             self.sub._on_nack(self, reason or "nack")
 
 
@@ -133,14 +157,22 @@ class Subscription:
             return True
 
     # ---- intake ----------------------------------------------------------
-    def _enqueue(self, msg: Message, attempt: int = 1):
+    def _enqueue(self, msg: Message, attempt: int = 1, *,
+                 holds_key: bool = False):
+        """Queue a delivery. ``holds_key=True`` marks a retry of an ordered
+        message that *already owns* its busy key (kept reserved across the
+        backoff so later messages with the key cannot overtake it); a
+        normal enqueue against a busy key parks in the per-key backlog."""
         with self._lock:
-            if msg.ordering_key is not None:
-                if msg.ordering_key in self._ordered_busy:
-                    self._ordered_backlog[msg.ordering_key].append(
-                        (msg, attempt))
+            key = msg.ordering_key
+            if key is not None:
+                if holds_key:
+                    self._ordered_busy.add(key)
+                elif key in self._ordered_busy:
+                    self._ordered_backlog[key].append((msg, attempt))
                     return
-                self._ordered_busy.add(msg.ordering_key)
+                else:
+                    self._ordered_busy.add(key)
             self.backlog.append((msg, attempt))
             self._pump()
 
@@ -154,6 +186,10 @@ class Subscription:
     def _deliver(self, msg: Message, attempt: int):
         # lock held
         if msg.message_id in self.acked:  # duplicate of an acked message
+            if msg.ordering_key is not None:
+                # the duplicate acquired the key in _enqueue; dropping it
+                # must not leave the key busy forever
+                self._release_key(msg.ordering_key)
             return
         ctx = DeliveryCtx(self, msg, attempt)
         self.outstanding[msg.message_id] = ctx
@@ -174,18 +210,34 @@ class Subscription:
             ctx.nack(f"exception: {e}")
 
     # ---- completion paths --------------------------------------------------
-    def _cleanup(self, ctx: DeliveryCtx):
+    def _release_key(self, key: str):
+        """Free an ordering key and hand delivery to the next queued message.
+
+        Called (lock held) on every settlement that ends this message's
+        ownership of the key — ack, dead-letter, and acked-duplicate drop.
+        A nack/deadline expiry that will be *retried* does not release: the
+        retry keeps the key reserved (see ``_enqueue(holds_key=True)``) so
+        per-key publish order survives the backoff.
+        """
+        self._ordered_busy.discard(key)
+        backlog = self._ordered_backlog.get(key)
+        if backlog:
+            nxt, att = backlog.popleft()
+            if not backlog:
+                del self._ordered_backlog[key]
+            self._enqueue(nxt, att)
+        elif backlog is not None:
+            del self._ordered_backlog[key]
+
+    def _cleanup(self, ctx: DeliveryCtx, *, release_key: bool = True):
         with self._lock:
             self.outstanding.pop(ctx.msg.message_id, None)
             for h in (ctx.deadline_handle, ctx.hedge_handle):
                 if h is not None:
                     h.cancel()
             key = ctx.msg.ordering_key
-            if key is not None and ctx.msg.message_id in self.acked:
-                self._ordered_busy.discard(key)
-                if self._ordered_backlog[key]:
-                    nxt, att = self._ordered_backlog[key].popleft()
-                    self._enqueue(nxt, att)
+            if key is not None and release_key:
+                self._release_key(key)
             self._pump()
 
     def _on_ack(self, ctx: DeliveryCtx):
@@ -198,16 +250,21 @@ class Subscription:
         )
         self._cleanup(ctx)
 
+    def _will_retry(self, ctx: DeliveryCtx) -> bool:
+        return ctx.attempt < self.max_delivery_attempts
+
     def _on_nack(self, ctx: DeliveryCtx, reason: str):
         self.metrics.inc(f"sub.{self.name}.nacks")
-        self._cleanup(ctx)
+        # a retried ordered message keeps its key reserved through the
+        # backoff; only a dead-letter hands the key to the next message
+        self._cleanup(ctx, release_key=not self._will_retry(ctx))
         self._retry(ctx, reason)
 
     def _on_deadline(self, ctx: DeliveryCtx):
         if not self._settle(ctx):
             return
         self.metrics.inc(f"sub.{self.name}.deadline_expired")
-        self._cleanup(ctx)
+        self._cleanup(ctx, release_key=not self._will_retry(ctx))
         self._retry(ctx, "ack deadline expired")
 
     def _on_hedge(self, ctx: DeliveryCtx):
@@ -216,12 +273,25 @@ class Subscription:
             if ctx.done or ctx.msg.message_id in self.acked:
                 return
         self.metrics.inc(f"sub.{self.name}.hedged")
-        # duplicate delivery outside the outstanding map (original still owns it)
-        dup = DeliveryCtx(self, ctx.msg, ctx.attempt)
+        # duplicate delivery outside the outstanding map (original still owns
+        # it); hedge_of routes the duplicate's settlement (see DeliveryCtx)
+        dup = DeliveryCtx(self, ctx.msg, ctx.attempt, hedge_of=ctx)
         self.scheduler.schedule(0.0, self._push, dup)
 
+    def _on_hedge_ack(self, dup: DeliveryCtx):
+        """The duplicate finished first: settle the original delivery."""
+        self.metrics.inc(f"sub.{self.name}.hedge_acks")
+        dup.hedge_of.ack()  # no-op if the original already settled
+
+    def _on_hedge_nack(self, dup: DeliveryCtx, reason: str):
+        # deliberately nothing else: the original owns the outstanding
+        # entry, deadline timer, and retry budget
+        self.metrics.inc(f"sub.{self.name}.hedge_nacks")
+        self.metrics.log("hedge_nack", sub=self.name,
+                         id=dup.msg.message_id, reason=reason)
+
     def _retry(self, ctx: DeliveryCtx, reason: str):
-        if ctx.attempt >= self.max_delivery_attempts:
+        if not self._will_retry(ctx):
             self.metrics.inc(f"sub.{self.name}.dead_lettered")
             self.metrics.log("dead_letter", sub=self.name,
                              id=ctx.msg.message_id, reason=reason)
@@ -233,8 +303,10 @@ class Subscription:
                       self.max_backoff)
         self.metrics.log("retry", sub=self.name, id=ctx.msg.message_id,
                          attempt=ctx.attempt, backoff=backoff, reason=reason)
+        held = ctx.msg.ordering_key is not None
         self.scheduler.schedule(
-            backoff, lambda: self._enqueue(ctx.msg, ctx.attempt + 1)
+            backoff,
+            lambda: self._enqueue(ctx.msg, ctx.attempt + 1, holds_key=held)
         )
 
     # ---- introspection -----------------------------------------------------
@@ -244,4 +316,6 @@ class Subscription:
                 "backlog": len(self.backlog),
                 "outstanding": len(self.outstanding),
                 "acked": len(self.acked),
+                "ordered_backlog": sum(
+                    len(q) for q in self._ordered_backlog.values()),
             }

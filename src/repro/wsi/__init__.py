@@ -1,6 +1,9 @@
 """WSI→DICOM conversion substrate: synthetic slides, pyramid, JPEG, DICOM."""
 from repro.wsi.convert import ConvertOptions, convert_wsi_to_dicom, study_levels  # noqa: F401
 from repro.wsi.dicom import Part10Index, read_part10, write_part10  # noqa: F401
+from repro.wsi.formats import (SlideFormat, SlideReader,  # noqa: F401
+                               TiffSlideReader, open_slide, register_format,
+                               sniff, write_psv, write_tiff)
 from repro.wsi.jpeg import (decode_tile, encode_coef_batch,  # noqa: F401
                             encode_tile, encode_tiles_batch, psnr)
 from repro.wsi.slide import PSVReader, SyntheticScanner  # noqa: F401

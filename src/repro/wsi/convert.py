@@ -1,15 +1,20 @@
-"""The converter: PSV (proprietary) → multi-level DICOM WSM study.
+"""The converter: any registered slide container → multi-level DICOM WSM study.
 
-Per slide: stream tiles from the container, build the multi-resolution
-pyramid with the Pallas downsample kernel, transform-code every tile (Pallas
-DCT/quant + host Huffman), wrap each level in a DICOM Part-10 instance
-(TILED_FULL), and bundle the study as a tar archive.
+Per slide: sniff the container (``repro.wsi.formats.open_slide`` — PSV,
+tiled TIFF/SVS, or any registered format), stream tiles through the
+``SlideReader`` protocol, build the multi-resolution pyramid with the
+Pallas downsample kernel, transform-code every tile (Pallas DCT/quant +
+host Huffman), wrap each level in a DICOM Part-10 instance (TILED_FULL),
+and bundle the study as a tar archive. The converter consumes only the
+reader protocol, so identical pixel content produces byte-identical study
+tars regardless of the source container (given the same manifest UIDs) —
+asserted across PSV vs tiled-TIFF in tests and the benchmark.
 
 Three compute paths (see DESIGN.md, "Whole-level batched dispatch" and
 "Pipelined conversion"), all emitting **byte-identical** study tars:
 
 - **pipelined** (default): the staged, overlapping engine. Level-0 tile
-  rows are uploaded to the device as ``PSVReader`` inflates them (no full
+  rows are uploaded to the device as the reader inflates them (no full
   host ``(H, W, 3)`` array), and JAX async dispatch is used to enqueue the
   ``jpeg_transform`` + ``downsample2x2`` work for level N+1 on device
   *before* the host runs the entropy coder + Part-10 wrap for level N
@@ -63,8 +68,8 @@ import jax.numpy as jnp
 from repro.kernels import downsample2x2, jpeg_transform
 from repro.wsi.dicom import (TS_EXPLICIT_LE, TS_JPEG_BASELINE, new_uid,
                              write_part10)
+from repro.wsi.formats import SlideReader, open_slide
 from repro.wsi.jpeg import encode_coef_batch, encode_tile
-from repro.wsi.slide import PSVReader
 
 __all__ = ["convert_wsi_to_dicom", "study_levels", "ConvertOptions"]
 
@@ -151,7 +156,7 @@ def _tile_batch(dev: jnp.ndarray, tile: int) -> jnp.ndarray:
             .transpose(1, 3, 0, 2, 4).reshape(bh * bw, 3, tile, tile))
 
 
-def _upload_level0(rd: PSVReader) -> jnp.ndarray:
+def _upload_level0(rd: SlideReader) -> jnp.ndarray:
     """Stream level 0 to the device one tile row at a time.
 
     Each row strip is handed to ``jax.device_put`` as soon as its tiles are
@@ -208,7 +213,7 @@ def _level_chunks(batch: jnp.ndarray, bh: int, bw: int) -> list[jnp.ndarray]:
             for r0 in range(0, bh, rows_per)]
 
 
-def _convert_pipelined(rd: PSVReader, metadata: dict | None,
+def _convert_pipelined(rd: SlideReader, metadata: dict | None,
                        opt: ConvertOptions, study_uid: str,
                        series_uid: str) -> int:
     """The staged overlapping engine. Returns the number of levels.
@@ -279,7 +284,7 @@ def _convert_pipelined(rd: PSVReader, metadata: dict | None,
     return li + 1
 
 
-def _convert_sync(rd: PSVReader, metadata: dict | None, opt: ConvertOptions,
+def _convert_sync(rd: SlideReader, metadata: dict | None, opt: ConvertOptions,
                   study_uid: str, series_uid: str) -> int:
     """The strictly sequential engine (batched or per-tile). Returns the
     number of levels."""
@@ -353,11 +358,19 @@ def _pack_study(opt: ConvertOptions, n_levels: int, study_uid: str,
     return buf.getvalue()
 
 
-def convert_wsi_to_dicom(psv_bytes: bytes, metadata: dict | None = None,
+def convert_wsi_to_dicom(slide_bytes: bytes, metadata: dict | None = None,
                          options: ConvertOptions | None = None) -> bytes:
-    """Full conversion. Returns a tar archive of per-level .dcm files."""
+    """Full conversion of any registered container (sniffed by magic bytes).
+
+    Returns a tar archive of per-level .dcm files. Raises an actionable
+    ``ValueError`` for unknown/truncated containers (see
+    ``repro.wsi.formats.sniff``)."""
     opt = options or ConvertOptions()
-    rd = PSVReader(psv_bytes)
+    rd = open_slide(slide_bytes)
+    if rd.H % rd.tile or rd.W % rd.tile:
+        raise ValueError(
+            f"slide is {rd.H}x{rd.W} with {rd.tile}px tiles — the pyramid "
+            "engine requires tile-aligned dimensions (pad the scan)")
     study_uid, series_uid = _study_uids(opt)
     if opt.pipelined and opt.batched and opt.jpeg:
         n_levels = _convert_pipelined(rd, metadata, opt, study_uid,

@@ -1,0 +1,19 @@
+"""Multi-format slide ingestion: ``SlideReader`` protocol + container registry.
+
+    from repro.wsi.formats import open_slide
+    rd = open_slide(blob)          # sniffs PSV / tiled-TIFF / SVS by magic
+    for (r, c), tile in rd.tiles():
+        ...
+
+See DESIGN.md, "Format ingestion", for the TIFF layout and how to add a
+reader (~150 lines: implement ``SlideReader``, register a ``SlideFormat``).
+"""
+from repro.wsi.formats.base import (SlideFormat, SlideReader,  # noqa: F401
+                                    formats, open_slide, register_format,
+                                    sniff)
+from repro.wsi.formats.psv import PSV_FORMAT, PSVReader, write_psv  # noqa: F401
+from repro.wsi.formats.tiff import (TIFF_FORMAT, TiffSlideReader,  # noqa: F401
+                                    write_tiff)
+
+register_format(PSV_FORMAT)
+register_format(TIFF_FORMAT)

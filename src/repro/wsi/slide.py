@@ -1,44 +1,29 @@
-"""Proprietary-format whole-slide images: a synthetic scanner + tiled reader.
+"""Synthetic whole-slide scanner (+ back-compat re-exports of the readers).
 
-Real WSIs are gigapixel images in vendor formats (SVS etc.) that cannot be
-loaded whole. We model that with **PSV** ("pretend-SVS"), a tiled container:
+Real WSIs are gigapixel images in vendor containers that cannot be loaded
+whole; the readers that stream them tile-by-tile live in
+``repro.wsi.formats`` (PSV and tiled TIFF/SVS — ``PSVReader``/``write_psv``
+are re-exported here for existing callers).
 
-    magic 'PSV1' | u32 H | u32 W | u32 tile | u32 n_tiles
-    per tile: u32 row | u32 col | u32 nbytes | zlib(RGB uint8 tile)
-
-The reader streams one tile at a time (the HBM→VMEM discipline of the real
-converters), never materializing the full image. ``SyntheticScanner``
-procedurally renders H&E-like content — smooth eosin background + scattered
-hematoxylin "nuclei" — deterministically from a seed, so tests and benchmarks
-get realistic, compressible, reproducible pixel data at any size.
+``SyntheticScanner`` procedurally renders H&E-like content — smooth eosin
+background + scattered hematoxylin "nuclei" — deterministically from a
+seed, so tests and benchmarks get realistic, compressible, reproducible
+pixel data at any size. It can emit the *same pixels* in either container
+(``scan`` → PSV, ``scan_tiff`` → SVS-shaped tiled TIFF), which is what the
+cross-format byte-identity assertions are built on.
 """
 from __future__ import annotations
 
-import io
-import struct
-import zlib
-
 import numpy as np
+
+from repro.wsi.formats.psv import PSVReader, write_psv  # noqa: F401
+from repro.wsi.formats.tiff import write_tiff
 
 __all__ = ["SyntheticScanner", "PSVReader", "write_psv"]
 
-_MAGIC = b"PSV1"
-
-
-def write_psv(tiles: dict[tuple[int, int], np.ndarray], H: int, W: int,
-              tile: int) -> bytes:
-    buf = io.BytesIO()
-    buf.write(_MAGIC)
-    buf.write(struct.pack("<IIII", H, W, tile, len(tiles)))
-    for (r, c), arr in sorted(tiles.items()):
-        raw = zlib.compress(np.ascontiguousarray(arr, np.uint8).tobytes(), 6)
-        buf.write(struct.pack("<III", r, c, len(raw)))
-        buf.write(raw)
-    return buf.getvalue()
-
 
 class SyntheticScanner:
-    """Renders deterministic H&E-like slides into PSV bytes."""
+    """Renders deterministic H&E-like slides into PSV or tiled-TIFF bytes."""
 
     def __init__(self, seed: int = 0):
         self.seed = seed
@@ -73,44 +58,27 @@ class SyntheticScanner:
         img = np.stack([r, g, b], axis=-1)
         return np.clip(img, 0, 255).astype(np.uint8)
 
+    def _render_tiles(self, H: int, W: int,
+                      tile: int) -> dict[tuple[int, int], np.ndarray]:
+        assert H % tile == 0 and W % tile == 0
+        return {(r, c): self._render_tile(r * tile, c * tile, tile, tile,
+                                          None)
+                for r in range(H // tile) for c in range(W // tile)}
+
     def scan(self, H: int = 1024, W: int = 1024, tile: int = 256) -> bytes:
         """Produce a PSV slide of the given dimensions."""
-        assert H % tile == 0 and W % tile == 0
-        tiles = {}
-        for r in range(H // tile):
-            for c in range(W // tile):
-                tiles[(r, c)] = self._render_tile(
-                    r * tile, c * tile, tile, tile, None
-                )
-        return write_psv(tiles, H, W, tile)
+        return write_psv(self._render_tiles(H, W, tile), H, W, tile)
 
+    def scan_tiff(self, H: int = 1024, W: int = 1024, tile: int = 256,
+                  description: str | None = None) -> bytes:
+        """Produce the same pixels as ``scan`` in an SVS-shaped tiled TIFF.
 
-class PSVReader:
-    """Streaming tile reader; indexes the container once, inflates on demand."""
-
-    def __init__(self, data: bytes):
-        if data[:4] != _MAGIC:
-            raise ValueError("not a PSV container")
-        self.H, self.W, self.tile, n = struct.unpack_from("<IIII", data, 4)
-        self._data = data
-        self._index: dict[tuple[int, int], tuple[int, int]] = {}
-        off = 20
-        for _ in range(n):
-            r, c, nb = struct.unpack_from("<III", data, off)
-            off += 12
-            self._index[(r, c)] = (off, nb)
-            off += nb
-
-    @property
-    def grid(self) -> tuple[int, int]:
-        return self.H // self.tile, self.W // self.tile
-
-    def read_tile(self, r: int, c: int) -> np.ndarray:
-        off, nb = self._index[(r, c)]
-        raw = zlib.decompress(self._data[off : off + nb])
-        t = self.tile
-        return np.frombuffer(raw, np.uint8).reshape(t, t, 3)
-
-    def tiles(self):
-        for (r, c) in sorted(self._index):
-            yield (r, c), self.read_tile(r, c)
+        The default ``ImageDescription`` carries Aperio-style ``Key =
+        Value`` vendor metadata, which ``TiffSlideReader`` parses back into
+        its ``metadata`` dict.
+        """
+        if description is None:
+            description = (f"repro SyntheticScanner v1 {W}x{H} "
+                           f"|AppMag = 20|MPP = 0.5|seed = {self.seed}")
+        return write_tiff(self._render_tiles(H, W, tile), H, W, tile,
+                          description=description)

@@ -105,6 +105,114 @@ def test_flow_control_limits_outstanding():
     assert sub.stats()["acked"] == 10
 
 
+def test_ordered_nack_redelivers_before_later_keyed_messages():
+    """Regression: a nacked ordered message used to re-enqueue into its own
+    busy key's backlog and never redeliver. The retry must come back — and
+    come back *before* later messages with the same key."""
+    got = []
+
+    def ep(m, c):
+        got.append(m.data["i"])
+        if m.data["i"] == 0 and got.count(0) == 1:
+            c.nack("boom")
+        else:
+            c.ack()
+
+    sched, topic, sub, dead = make(ep, min_backoff=5.0)
+    for i in range(3):
+        topic.publish({"i": i}, ordering_key="slide-1")
+    sched.run()
+    assert got == [0, 0, 1, 2]  # retried first; key order preserved
+    assert sub.stats()["acked"] == 3
+    assert sub.stats()["ordered_backlog"] == 0
+    assert not dead
+
+
+def test_ordered_deadline_expiry_redelivers_and_key_drains():
+    """Regression: a deadline-expired ordered delivery wedged its key the
+    same way a nack did."""
+    calls = []
+
+    def ep(m, c):
+        calls.append(m.data["i"])
+        if m.data["i"] == 0 and calls.count(0) == 1:
+            return  # worker dies holding the keyed message
+        c.ack()
+
+    sched, topic, sub, dead = make(ep, ack_deadline=30.0, min_backoff=5.0)
+    topic.publish({"i": 0}, ordering_key="k")
+    topic.publish({"i": 1}, ordering_key="k")
+    sched.run()
+    assert calls == [0, 0, 1]
+    assert sub.stats()["acked"] == 2
+    assert not dead
+
+
+def test_ordered_dead_letter_releases_key():
+    """Regression: a dead-lettered ordered message left its key busy
+    forever, stalling every later message with that key."""
+    def ep(m, c):
+        if m.data["i"] == 0:
+            c.nack("poison")
+        else:
+            c.ack()
+
+    sched, topic, sub, dead = make(ep, max_delivery_attempts=2,
+                                   min_backoff=1.0)
+    topic.publish({"i": 0}, ordering_key="k")
+    topic.publish({"i": 1}, ordering_key="k")
+    topic.publish({"i": 2}, ordering_key="k")
+    sched.run()
+    assert [d["i"] for d in dead] == [0]  # the poison message dead-letters
+    assert sub.stats()["acked"] == 2  # …and the key's backlog drains
+    assert sub.stats()["ordered_backlog"] == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_msgs=st.integers(1, 12),
+    fail_pattern=st.lists(st.integers(0, 3), min_size=1, max_size=40),
+    n_keys=st.integers(1, 3),
+)
+def test_ordered_at_least_once_invariant(n_msgs, fail_pattern, n_keys):
+    """Property: ordered delivery under any failure pattern still settles
+    every message (acked or dead-lettered), never wedges a key, and never
+    lets a later message with a key overtake an earlier one's settlement."""
+    state = {"calls": 0}
+    settled: dict[str, list[int]] = {}
+
+    def ep(m, c):
+        k = state["calls"]
+        state["calls"] += 1
+        mode = fail_pattern[k % len(fail_pattern)]
+        if mode == 0:
+            settled.setdefault(m.ordering_key, []).append(m.data["i"])
+            c.ack()
+        elif mode == 1:
+            c.nack("injected")
+        elif mode == 2:
+            raise RuntimeError("crash")
+        else:
+            pass  # hang → deadline expiry
+
+    sched = SimScheduler()
+    topic = Topic("t", sched)
+    dlq = Topic("dlq", sched)
+    dead = []
+    Subscription(dlq, "sink", lambda m, c: (dead.append(m.data["i"]), c.ack()))
+    sub = Subscription(topic, "s", ep, dlq=dlq, ack_deadline=30.0,
+                       min_backoff=1.0, max_delivery_attempts=4)
+    for i in range(n_msgs):
+        topic.publish({"i": i}, ordering_key=f"k{i % n_keys}")
+    sched.run(max_events=200_000)
+    assert sched.idle(), "simulation did not quiesce"
+    assert sub.stats()["acked"] + len(dead) == n_msgs
+    assert sub.stats()["backlog"] == 0 and sub.stats()["outstanding"] == 0
+    assert sub.stats()["ordered_backlog"] == 0, "wedged ordering key"
+    for key, acked in settled.items():
+        assert acked == sorted(acked), f"key {key} acked out of order"
+
+
 def test_hedge_fires_duplicate_for_straggler():
     deliveries = []
 
@@ -120,6 +228,57 @@ def test_hedge_fires_duplicate_for_straggler():
     sched.run()
     assert len(deliveries) == 2
     assert deliveries[1] >= 50.0
+
+
+def test_hedge_nack_does_not_disturb_original_delivery():
+    """Regression: a hedged duplicate shares the original's message_id, and
+    its nack used to pop the *original's* outstanding entry and schedule a
+    retry while the original was still in flight — double-delivering. A
+    failed duplicate must settle itself only; the slow original's own ack
+    is the message's one settlement."""
+    deliveries = []
+
+    def ep(m, c):
+        deliveries.append(sched.now())
+        if len(deliveries) == 1:
+            sched.schedule(200.0, c.ack)  # slow original, eventually fine
+        else:
+            c.nack("hedge gave up")  # duplicate fails fast
+
+    sched, topic, sub, dead = make(ep, hedge_after=50.0, ack_deadline=1000.0,
+                                   min_backoff=10.0)
+    topic.publish({"i": 0})
+    sched.run()
+    assert len(deliveries) == 2  # original + hedge, no phantom redelivery
+    assert sub.stats()["acked"] == 1
+    assert sub.stats()["outstanding"] == 0
+    assert not dead
+    # the duplicate's failure is accounted separately, not as a message nack
+    assert sub.metrics.counters.get("sub.s.nacks", 0) == 0
+    assert sub.metrics.counters["sub.s.hedge_nacks"] == 1
+    assert "sub.s.deadline_expired" not in sub.metrics.counters
+
+
+def test_hedge_ack_settles_original_and_cancels_its_timers():
+    """When the duplicate wins, the original's deadline timer must die with
+    it — no deadline_expired redelivery at t=ack_deadline."""
+    deliveries = []
+    def ep(m, c):
+        deliveries.append(sched.now())
+        if len(deliveries) == 1:
+            return  # original hangs forever
+        c.ack()  # duplicate finishes
+
+    sched, topic, sub, dead = make(ep, hedge_after=20.0, ack_deadline=100.0,
+                                   min_backoff=5.0)
+    topic.publish({"i": 0})
+    sched.run()
+    assert len(deliveries) == 2
+    assert sub.stats()["acked"] == 1
+    assert sub.stats()["outstanding"] == 0
+    assert sub.metrics.counters["sub.s.hedge_acks"] == 1
+    assert "sub.s.deadline_expired" not in sub.metrics.counters
+    assert not dead
 
 
 @settings(max_examples=25, deadline=None)

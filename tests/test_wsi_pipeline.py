@@ -142,6 +142,37 @@ def test_redelivered_source_reuses_its_out_key():
     sched.shutdown()
 
 
+def test_run_batch_fails_fast_on_poison_slide():
+    """A slide that permanently fails conversion used to spin run_batch's
+    full timeout in a 2 ms busy-poll; now the DLQ listener raises with the
+    dlq_reason as soon as the retry budget is exhausted."""
+    sched = RealScheduler(workers=4)
+
+    def convert(data, meta):
+        if "bad" in meta["slide_id"]:
+            raise ValueError("unreadable slide: vendor firmware glitch")
+        return convert_wsi_to_dicom(data, meta)
+
+    pipe = ConversionPipeline(
+        sched, convert=convert, max_instances=2, cold_start=0.0,
+        scale_down_delay=2.0, max_delivery_attempts=2,
+        min_backoff=0.05, max_backoff=0.05, subscribers=False,
+    )
+    scanner = SyntheticScanner(seed=3)
+    slides = {"slides/ok.psv": scanner.scan(256, 256, 256),
+              "slides/bad.psv": scanner.scan(256, 256, 256)}
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError,
+                       match="slides/bad.psv.*unreadable slide"):
+        pipe.run_batch(slides, timeout=240.0)
+    assert time.monotonic() - t0 < 60.0  # failed fast, not at the timeout
+    # the failure carries the converter's actual error, and the DLQ sink
+    # recorded the poisoned event
+    assert any("vendor firmware glitch" in reason
+               for _, reason in pipe.dead_lettered)
+    sched.shutdown()
+
+
 def test_run_batch_raises_on_duplicate_out_keys():
     sched = RealScheduler(workers=2)
     pipe = ConversionPipeline(
