@@ -15,14 +15,19 @@ verify: test
 # AND runs the mixed-format batch (PSV + tiled-TIFF deliveries of the same
 # pixels through one sniffing deployment must emit byte-identical study
 # tars); the store benchmark asserts indexed-WADO byte identity + ≥10x
-# plus re-STOW / crash-rebuild QIDO/WADO identity
+# plus re-STOW / crash-rebuild QIDO/WADO identity; the export benchmark
+# asserts batched-decode pixel identity + coefficient-exact round-trip,
+# a >1x whole-level decode speedup, and byte-identical repeated /
+# post-rebuild exports that reopen through the TIFF sniffer
 smoke:
 	python -m benchmarks.convert_bench --fast
 	python -m benchmarks.store_bench --fast
+	python -m benchmarks.export_bench --fast
 
-# benchmark suite: paper figures + kernels + conversion + store hot paths
-# (writes BENCH_*.json into the working directory)
+# benchmark suite: paper figures + kernels + conversion + store + export
+# hot paths (writes BENCH_*.json into the working directory)
 bench:
 	python -m benchmarks.run
 	python -m benchmarks.convert_bench
 	python -m benchmarks.store_bench
+	python -m benchmarks.export_bench

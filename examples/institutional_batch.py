@@ -12,7 +12,10 @@ What it demonstrates, and what to expect:
    wsi2dcm service) converts them with the pipelined JAX engine, up to
    ``--concurrency`` in parallel per instance (default: cores // 2).
    Prints the batch wall time vs the serial-sync equivalent and verifies
-   every study landed in the DICOM store.
+   every study landed in the DICOM store. ``auto_export=True`` closes the
+   retrieval loop: every stored instance triggers the dicom2tiff export
+   hop, and the final printout reports the ``pipeline.export.*`` counters
+   plus the derived-bucket tiled TIFFs.
 2. **Paper scale** — the three workflows (serial, 16-way parallel VM pool,
    event-driven autoscaling) simulated at the paper's scale in the
    discrete-event simulator, calibrated by the measured real conversion,
@@ -65,7 +68,7 @@ def run_real_batch(n: int, size: int, concurrency: int) -> None:
     sched = RealScheduler(workers=max(8, 4 * concurrency))
     pipe = ConversionPipeline(
         sched, convert=convert, max_instances=1, concurrency=concurrency,
-        cold_start=0.0, scale_down_delay=5.0,
+        cold_start=0.0, scale_down_delay=5.0, auto_export=True,
     )
     t0 = time.perf_counter()
     pipe.run_batch(slides)
@@ -81,14 +84,22 @@ def run_real_batch(n: int, size: int, concurrency: int) -> None:
         n_dcm = sum(1 for k in study if k.endswith(".dcm"))
         print(f"  gs://dicom-store/{key}: {n_dcm} levels, "
               f"{len(pipe.dicom.get(key).data):,} bytes")
-    sched.run(until=30.0)  # let the store ingest + subscribers drain
+    sched.run(until=30.0)  # store ingest + subscribers + auto-export drain
     studies = pipe.store_service.search_studies()
     print(f"  enterprise store: {len(studies)} studies, "
           f"{sum(pipe.store_service.study_summary(s)['n_instances'] for s in studies)} instances | "
           f"validated: {len(pipe.validator.checked)}, "
           f"ml-scored: {len(pipe.ml_subscriber.predictions)}")
+    c = pipe.metrics.counters
+    print(f"  dicom2tiff export (auto, event-driven): "
+          f"requests={c['pipeline.export.requests']:g}, "
+          f"frames decoded={c['pipeline.export.frames_decoded']:g}, "
+          f"bytes written={c['pipeline.export.bytes_written']:,.0f}, "
+          f"dead-lettered={c.get('pipeline.export.dead_lettered', 0):g}")
+    print(f"  gs://wsi-derived: {len(pipe.derived.list())} level TIFFs "
+          f"across {len(studies)} studies")
     print(f"  cold starts: {pipe.service.cold_starts}, "
-          f"acks: {pipe.metrics.counters['sub.wsi2dcm-push.acks']:g}\n")
+          f"acks: {c['sub.wsi2dcm-push.acks']:g}\n")
     sched.shutdown()
 
 

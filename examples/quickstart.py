@@ -9,16 +9,19 @@ notification → pub/sub topic → push subscription → autoscaled converter
 (which sniffs each container by magic bytes and runs the pipelined
 JAX/Pallas transform + host Huffman engine) → DICOM-store bucket → store
 ingest → enterprise DICOM store → validation + ML-inference subscribers.
-Then reads the DICOM studies back and verifies them.
+Then reads the DICOM studies back, verifies them, and drives the export
+hop: one study is re-materialized as a tiled-TIFF pyramid in the derived
+bucket (batched inverse JPEG path) and reopened through the sniffer.
 
 Expected output: both container byte counts, two converted studies in the
 DICOM store (one .dcm per pyramid level — a 512² slide yields 2 levels),
 each level's dimensions/frame count/transfer syntax, a level-0 PSNR in
 the 30–40 dB range against the scanner's pixels, the enterprise store's
 QIDO view of the studies with the validation verdicts and the mock ML
-model's frame scores (fetched via indexed frame-level WADO), the
-pipeline's metric counters (note ``pipeline.format.psv`` and
-``pipeline.format.tiff``), and a final "quickstart OK".
+model's decoded per-frame pixel stats (fetched via indexed frame-level
+WADO), the exported level TIFFs, the pipeline's metric counters (note
+``pipeline.format.psv``/``pipeline.format.tiff`` and the
+``pipeline.export.*`` family), and a final "quickstart OK".
 """
 import sys
 from pathlib import Path
@@ -79,9 +82,22 @@ def main():
     print(f"   validation: {len(pipe.validator.checked)} passed, "
           f"{len(pipe.validator.quarantined)} quarantined")
     for sop, pred in sorted(pipe.ml_subscriber.predictions.items()):
-        feats = ", ".join(f"{v:.1f}" for v in pred["features"])
+        feats = ", ".join(f"{st['mean']:.1f}±{st['std']:.0f}"
+                          for st in pred["pixel_stats"])
         print(f"   ml-inference {sop[-12:]}: {pred['frames_scored']} "
-              f"frames via WADO, features [{feats}]")
+              f"frames decoded via WADO, pixel mean±std [{feats}]")
+
+    print("== export hop: study → derived tiled-TIFF pyramid ==")
+    from repro.wsi import open_slide
+
+    export_study = svc.search_studies()[0]
+    pipe.request_export(export_study)
+    sched.run(until=60.0)
+    for key in pipe.derived.list():
+        rd = open_slide(pipe.derived.get(key).data)
+        print(f"   gs://wsi-derived/{key[-18:]}: {rd.H}x{rd.W} "
+              f"{type(rd).__name__} (level {rd.metadata['level']}) — "
+              "reopens via the sniffer")
 
     print("== metrics ==")
     for k, v in sorted(pipe.metrics.counters.items()):

@@ -23,6 +23,15 @@ subscription that unpacks the archive into the enterprise
 ``DicomStoreService`` (idempotent STOW under canonical instance keys),
 whose own ``dicom-instance-stored`` topic fans out to the attached
 validation and mock ML-inference subscribers.
+
+The pipeline's third hop runs the other direction — retrieval: an
+``export-request`` topic (its own push subscription + DLQ, symmetric with
+ingestion) drives the ``ExportService``, which reads a stored study back
+through QIDO/WADO and writes a deterministic tiled-TIFF pyramid into the
+``derived`` bucket, where existing open-source analysis tooling (or this
+very pipeline's TIFF sniffer, full circle) can consume it. Requests come
+from ``request_export()`` or, with ``auto_export=True``, from every
+``dicom-instance-stored`` event.
 """
 from __future__ import annotations
 
@@ -73,7 +82,9 @@ class ConversionPipeline:
         dicom_bucket: str = "dicom-store",
         instance_bucket: str = "dicom-instances",
         quarantine_bucket: str = "dicom-dlq",
+        derived_bucket: str = "wsi-derived",
         subscribers: bool = True,
+        auto_export: bool = False,
         lifecycle_cold_after: float = 30 * 24 * 3600.0,
         lifecycle_archive_after: float = 365 * 24 * 3600.0,
     ):
@@ -155,6 +166,31 @@ class ConversionPipeline:
                                                self.quarantine)
             self.ml_subscriber = InferenceSubscriber(self.store_service)
 
+        # --- export / retrieval hop (study → derived tiled-TIFF pyramid) ---
+        # the third event-driven hop, symmetric with ingestion: its own
+        # request topic, push subscription, and DLQ (with a sink recording
+        # dead-lettered exports + the pipeline.export.dead_lettered metric)
+        from repro.wsi.export import ExportService
+
+        self.derived = self.store.bucket(derived_bucket)
+        self.export_topic = Topic("export-request", scheduler, self.metrics)
+        self.export_dlq = Topic("export-request-dlq", scheduler,
+                                self.metrics)
+        self.export_service = ExportService(
+            self.store_service, self.derived,
+            request_topic=self.export_topic, dlq=self.export_dlq,
+            ack_deadline=ack_deadline,
+            max_delivery_attempts=max_delivery_attempts,
+            min_backoff=min_backoff, max_backoff=max_backoff)
+        self.export_dead_lettered: list[tuple[dict, str]] = []
+        self.export_dlq_sink = Subscription(
+            self.export_dlq, "dicom2tiff-dlq-sink", self._export_dlq_endpoint)
+        self.auto_export_subscription = None
+        if auto_export:
+            self.auto_export_subscription = Subscription(
+                self.store_service.topic, "auto-export-trigger",
+                self._auto_export_endpoint)
+
     # ---- subscription push endpoint → service --------------------------
     def _endpoint(self, msg: Message, ctx: DeliveryCtx):
         def done(ok: bool):
@@ -177,6 +213,25 @@ class ConversionPipeline:
             # later re-ingest of the same key can't report a stale reason
             self._errors.pop(msg.data.get("name"), None)
             self._batch_cond.notify_all()
+        ctx.ack()
+
+    # ---- export hop -----------------------------------------------------
+    def request_export(self, study_uid: str) -> Message:
+        """Ask the export service for a derived tiled-TIFF pyramid."""
+        return self.export_topic.publish({"study_uid": study_uid})
+
+    def _auto_export_endpoint(self, msg: Message, ctx: DeliveryCtx):
+        # every stored instance re-requests its study's export; the export
+        # is deterministic and the derived bucket content-addressed, so the
+        # extra requests collapse into idempotent no-ops
+        self.request_export(msg.data["study_uid"])
+        ctx.ack()
+
+    def _export_dlq_endpoint(self, msg: Message, ctx: DeliveryCtx):
+        with self._converted_lock:
+            self.export_dead_lettered.append(
+                (msg.data, msg.attributes.get("dlq_reason", "")))
+        self.metrics.inc("pipeline.export.dead_lettered")
         ctx.ack()
 
     # ---- dicom bucket → enterprise store ingest -------------------------

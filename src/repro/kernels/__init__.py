@@ -7,6 +7,7 @@ from repro.kernels.ops import (  # noqa: F401
     dct8x8_quant,
     downsample2x2,
     idct8x8_dequant,
+    jpeg_inverse,
     jpeg_transform,
     rgb2ycbcr,
 )

@@ -30,11 +30,12 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.dct8x8_quant import dct8x8_quant_pallas
 from repro.kernels.downsample2x2 import downsample2x2_pallas
+from repro.kernels.jpeg_inverse import jpeg_inverse_pallas
 from repro.kernels.jpeg_transform import jpeg_transform_pallas
 from repro.kernels.rgb2ycbcr import rgb2ycbcr_pallas
 
 __all__ = ["rgb2ycbcr", "downsample2x2", "dct8x8_quant", "idct8x8_dequant",
-           "jpeg_transform"]
+           "jpeg_transform", "jpeg_inverse"]
 
 
 def _interpret() -> bool:
@@ -96,6 +97,24 @@ def jpeg_transform(tiles, qluma=None, qchroma=None, impl: str = "auto"):
         impl, _aligned(tiles.shape[2], 8) and _aligned(tiles.shape[3], 128),
         partial(jpeg_transform_pallas, tiles, qluma, qchroma),
         lambda: ref.jpeg_transform_ref(tiles, qluma, qchroma))
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def jpeg_inverse(coef, qluma=None, qchroma=None, impl: str = "auto"):
+    """(N, 3, T, T) i32 quantized YCbCr DCT coefs → (N, 3, T, T) u8 RGB.
+
+    The whole-level batched inverse dispatch: one kernel launch
+    decode-transforms every tile of a stored pyramid level (fused dequant +
+    per-channel iDCT + YCbCr→RGB + round/clip) — the device half of the
+    export path's JPEG decoder.
+    """
+    qluma = jnp.asarray(ref.JPEG_LUMA_Q) if qluma is None else qluma
+    qchroma = jnp.asarray(ref.JPEG_CHROMA_Q) if qchroma is None else qchroma
+    return _dispatch(
+        impl, _aligned(coef.shape[2], 8) and _aligned(coef.shape[3], 128),
+        lambda **kw: jpeg_inverse_pallas(
+            coef, qluma, qchroma, **kw).astype(jnp.uint8),
+        lambda: ref.jpeg_inverse_ref(coef, qluma, qchroma))
 
 
 @jax.jit

@@ -7,7 +7,8 @@ import numpy as np
 
 __all__ = [
     "rgb2ycbcr_ref", "downsample2x2_ref", "dct8x8_quant_ref",
-    "idct8x8_dequant_ref", "jpeg_transform_ref", "ycbcr_polynomials",
+    "idct8x8_dequant_ref", "jpeg_transform_ref", "jpeg_inverse_ref",
+    "idct_dequant_blocks", "ycbcr_polynomials", "ycbcr_inverse_polynomials",
     "dct_matrix", "JPEG_LUMA_Q", "JPEG_CHROMA_Q",
 ]
 
@@ -57,6 +58,22 @@ def ycbcr_polynomials(r, g, b):
     cb = -0.168736 * r - 0.331264 * g + 0.5 * b
     cr = 0.5 * r - 0.418688 * g - 0.081312 * b
     return y, cb, cr
+
+
+def ycbcr_inverse_polynomials(y, cb, cr):
+    """The single copy of the inverse (level-unshifted) YCbCr→RGB polynomials.
+
+    The exact mirror of :func:`ycbcr_polynomials` and under the same
+    contract: the Pallas inverse kernel body and the jnp oracle must call
+    this one copy, because the batched/per-tile **decoder** pixel-identity
+    contract (``decode_tiles_batch`` ≡ ``decode_tile`` loop) needs
+    bit-identical floats before the final round/clip to uint8.
+    """
+    y = y + 128.0
+    r = y + 1.402 * cr
+    g = y - 0.344136 * cb - 0.714136 * cr
+    b = y + 1.772 * cb
+    return r, g, b
 
 
 def rgb2ycbcr_ref(img):
@@ -122,3 +139,50 @@ def idct8x8_dequant_ref(coef, qtable):
     x = x.transpose(0, 2, 1, 3) * qtable[None, None]
     y = jnp.einsum("ji,bcjk,kl->bcil", C, x, C)  # Cᵀ·X·C
     return y.transpose(0, 2, 1, 3).reshape(H, W)
+
+
+def idct_dequant_blocks(xb, qtable, C=None):
+    """(…, 8, 8) quantized coefficient blocks → (…, 8, 8) spatial samples.
+
+    The single copy of the inverse-transform contraction, shared by the
+    fused Pallas kernel body (``jpeg_inverse_pallas``) and the batched
+    oracle below — the decoder-side twin of ``ycbcr_polynomials``'s
+    contract, with two extra bit-exactness guards the forward path's
+    quantization rounding forgives but a pixel round does not:
+
+    * the iDCT is **two chained fixed-order contractions** (Cᵀ·X, then ·C)
+      rather than one triple einsum — a triple einsum lets the backend pick
+      the association order per operand shape, and the two orders differ in
+      the last ULPs;
+    * the kernel passes the host-built ``dct_matrix()`` in as an operand
+      (``C``) instead of rebuilding it in-kernel with iota→cos — XLA's
+      float32 cosine differs from numpy's in the last ULP.
+    """
+    if C is None:
+        C = jnp.asarray(dct_matrix())
+    x = xb.astype(jnp.float32) * qtable
+    t = jnp.einsum("ji,...jk->...ik", C, x)
+    return jnp.einsum("...ik,kl->...il", t, C)
+
+
+def jpeg_inverse_ref(coef, qluma=None, qchroma=None):
+    """Oracle for the fused whole-level inverse JPEG transform kernel.
+
+    coef: (N, 3, H, W) int quantized YCbCr DCT coefficients (blocks in
+    place) → (N, 3, H, W) uint8 RGB (idct_dequant_blocks per channel +
+    ycbcr_inverse_polynomials + round/clip, batched) — the inverse of
+    :func:`jpeg_transform_ref` up to quantization loss.
+    """
+    qluma = JPEG_LUMA_Q if qluma is None else qluma
+    qchroma = JPEG_CHROMA_Q if qchroma is None else qchroma
+    N, _, H, W = coef.shape
+    qs = (qluma, qchroma, qchroma)
+    planes = []
+    for c in range(3):
+        x = (coef[:, c].reshape(N, H // 8, 8, W // 8, 8)
+             .transpose(0, 1, 3, 2, 4))
+        y = idct_dequant_blocks(x, jnp.asarray(qs[c]))
+        planes.append(y.transpose(0, 1, 3, 2, 4).reshape(N, H, W))
+    r, g, b = ycbcr_inverse_polynomials(*planes)
+    rgb = jnp.stack([r, g, b], axis=1)
+    return jnp.clip(jnp.round(rgb), 0, 255).astype(jnp.uint8)

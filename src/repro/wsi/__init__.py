@@ -4,8 +4,11 @@ from repro.wsi.dicom import Part10Index, read_part10, write_part10  # noqa: F401
 from repro.wsi.formats import (SlideFormat, SlideReader,  # noqa: F401
                                TiffSlideReader, open_slide, register_format,
                                sniff, write_psv, write_tiff)
-from repro.wsi.jpeg import (decode_tile, encode_coef_batch,  # noqa: F401
-                            encode_tile, encode_tiles_batch, psnr)
+from repro.wsi.export import ExportService  # noqa: F401
+from repro.wsi.jpeg import (decode_coef_batch, decode_frames,  # noqa: F401
+                            decode_tile, decode_tiles_batch,
+                            encode_coef_batch, encode_tile,
+                            encode_tiles_batch, psnr)
 from repro.wsi.slide import PSVReader, SyntheticScanner  # noqa: F401
 from repro.wsi.store_service import DicomStoreService  # noqa: F401
 from repro.wsi.subscribers import InferenceSubscriber, ValidationService  # noqa: F401

@@ -16,9 +16,23 @@ Two encoder paths, byte-identical by construction (tested):
   numpy-vectorized symbol-stream entropy coder (``encode_coef_batch``) whose
   cost scales with the number of emitted symbols, not coefficients.
 
+And two decoder paths, pixel-identical by construction (tested) — the
+export subsystem's compute spine run in reverse:
+
+- ``decode_tile``: the per-tile path — a per-symbol Python Huffman loop,
+  then the fused ``jpeg_inverse`` dispatch. Kept as the A/B baseline.
+- ``decode_tiles_batch``: the whole-level batched path — the vectorized
+  entropy **decoder** (``decode_coef_batch``: every tile of a level is an
+  independent bitstream, so N tiles are decoded in numpy lockstep, one
+  vectorized step per symbol *position* instead of one Python iteration
+  per symbol per tile), then a single fused ``jpeg_inverse`` dispatch for
+  the whole level. Entropy ``decode ∘ encode`` is exact at the coefficient
+  level (the bitstream is lossless; only quantization loses information).
+
 Produces/consumes real JFIF bytes (SOI/APP0/DQT/SOF0/DHT/SOS/EOI, standard
-Annex-K tables, 4:4:4, byte stuffing). The decoder exists for round-trip
-tests and PSNR measurement.
+Annex-K tables, 4:4:4, byte stuffing). Truncated or garbage input raises
+``ValueError("corrupt JPEG …")`` from every decode entry point — that
+string is what the export service turns into an actionable DLQ reason.
 
 Both encoder paths are thread-safe (the zigzag gather-index cache is the
 only module-level mutable state and is lock-protected), and the heavy numpy
@@ -32,12 +46,14 @@ import threading
 
 import numpy as np
 
-from repro.kernels import (dct8x8_quant, idct8x8_dequant, jpeg_transform,
+from repro.kernels import (dct8x8_quant, jpeg_inverse, jpeg_transform,
                            rgb2ycbcr)
 from repro.kernels.ref import JPEG_CHROMA_Q, JPEG_LUMA_Q
+from repro.wsi.dicom import TS_EXPLICIT_LE, TS_JPEG_BASELINE
 
 __all__ = ["encode_tile", "encode_tiles_batch", "encode_coef_batch",
-           "decode_tile", "psnr"]
+           "decode_tile", "decode_tiles_batch", "decode_coef_batch",
+           "decode_frames", "psnr"]
 
 # --------------------------------------------------------------------------
 # Annex-K Huffman tables
@@ -145,6 +161,8 @@ class _BitReader:
         self.nbits = 0
 
     def _fill(self):
+        if self.pos >= len(self.data):
+            raise ValueError("corrupt JPEG stream: truncated scan data")
         b = self.data[self.pos]
         self.pos += 1
         if b == 0xFF and self.pos < len(self.data) \
@@ -163,13 +181,13 @@ class _BitReader:
 
     def huff(self, table: dict) -> int:
         code, ln = 0, 0
-        while ln < 17:
+        while ln < 16:
             code = (code << 1) | self.get(1)
             ln += 1
             sym = table.get((code, ln))
             if sym is not None:
                 return sym
-        raise ValueError("bad Huffman stream")
+        raise ValueError("corrupt JPEG stream: invalid Huffman code")
 
 
 def _category(v: int) -> int:
@@ -456,6 +474,9 @@ def _decode_blocks(br: _BitReader, H: int, W: int) -> list[np.ndarray]:
                         k += 16
                         continue
                     k += run
+                    if k > 63:
+                        raise ValueError(
+                            "corrupt JPEG stream: AC run past end of block")
                     bits = br.get(s)
                     v = bits if bits >= (1 << (s - 1)) else bits - (1 << s) + 1
                     blk[k] = v
@@ -466,6 +487,293 @@ def _decode_blocks(br: _BitReader, H: int, W: int) -> list[np.ndarray]:
         zz = out[comp][:, :, inv_zz].reshape(bh, bwid, 8, 8)
         planes.append(zz.transpose(0, 2, 1, 3).reshape(H, W))
     return planes
+
+
+# --------------------------------------------------------------------------
+# Vectorized entropy decoder (the batched export path)
+# --------------------------------------------------------------------------
+# 16-bit-lookahead Huffman tables: LUT[peek] = (symbol, code length). Codes
+# are ≤ 16 bits, so every 16-bit window starting at a code boundary resolves
+# the symbol in one gather; windows matching no code have length 0 (corrupt).
+def _huff_lut(table: dict) -> tuple[np.ndarray, np.ndarray]:
+    sym = np.zeros(1 << 16, np.int16)
+    ln = np.zeros(1 << 16, np.int16)
+    for s, (code, length) in table.items():
+        lo = code << (16 - length)
+        sym[lo:lo + (1 << (16 - length))] = s
+        ln[lo:lo + (1 << (16 - length))] = length
+    return sym, ln
+
+# stacked [dc-luma, dc-chroma, ac-luma, ac-chroma]: the lockstep decoder
+# selects a row per tile from its (DC/AC phase, component) state
+_LUTS = [_huff_lut(_ENC[(kind, tid)])
+         for kind in ("dc", "ac") for tid in (0, 1)]
+_LUT_SYM = np.stack([s for s, _ in _LUTS])
+_LUT_LEN = np.stack([ln for _, ln in _LUTS])
+del _LUTS
+
+# magnitude decode, tabulated per category s: value = bits if bits ≥ 2^(s-1)
+# else bits - (2^s - 1)   (s = 0 ⇒ no bits, value 0)
+_MAG_MASK = np.array([(1 << s) - 1 for s in range(16)], np.uint64)
+_MAG_HALF = np.array([1 << max(s - 1, 0) for s in range(16)], np.int64)
+_MAG_EXT = np.array([(1 << s) - 1 for s in range(16)], np.int64)
+
+#: zero bytes appended after every tile's unstuffed scan so the sliding
+#: 64-bit window at a (possibly truncated) stream's end stays in bounds —
+#: one iteration can advance a corrupt tile's cursor ≤ 27 bits past its end
+#: before the overrun check fires
+_GUARD = 8
+
+
+def _unstuff(scan: np.ndarray) -> np.ndarray:
+    """Drop the stuffed 0x00 after every 0xFF (vectorized per tile)."""
+    if scan.size < 2:
+        return scan
+    stuffed = (scan[:-1] == 0xFF) & (scan[1:] == 0x00)
+    if not stuffed.any():
+        return scan
+    keep = np.ones(scan.size, bool)
+    keep[1:][stuffed] = False
+    return scan[keep]
+
+
+def _window64(buf: np.ndarray) -> np.ndarray:
+    """``w[p]`` = bytes ``p..p+7`` of ``buf`` as one big-endian uint64.
+
+    Built once per batch with 8 vectorized passes, so the lockstep loop
+    reads each tile's next 57+ lookahead bits with a *single* gather: a
+    Huffman code (≤ 16 bits) plus its magnitude bits (≤ 11) plus the ≤ 7
+    sub-byte phase is ≤ 34 bits, comfortably inside the window.
+    """
+    pad = np.concatenate([buf, np.zeros(8, np.uint8)])
+    w = np.zeros(buf.size, np.uint64)
+    for i in range(8):
+        w |= pad[i:i + buf.size].astype(np.uint64) << np.uint64(56 - 8 * i)
+    return w
+
+
+def _entropy_decode_batch(scans: list[np.ndarray], H: int,
+                          W: int) -> np.ndarray:
+    """Lockstep twin of ``_decode_blocks`` over N independent scans.
+
+    Every tile of a level is its own bitstream (one scan per tile, DC
+    predictors reset at tile boundaries), which is the vectorization axis
+    the sequential Huffman dependency cannot remove *within* a stream: all
+    N tiles advance one symbol per numpy step, so the Python-interpreter
+    cost is paid once per symbol *position* across the level instead of
+    once per symbol per tile — throughput scales with the batch size (see
+    BENCH_export.json's ``batch_scaling``). DC slots hold differentials
+    during the loop and are integrated with one cumsum at the end.
+    Returns (N, nb, 3, 64) int32 zigzag coefficients, exactly the symbols
+    the per-tile reference loop decodes.
+    """
+    N = len(scans)
+    nb = (H // 8) * (W // 8)
+    nu = nb * 3  # block-component units per tile, in bitstream order
+
+    offs = np.zeros(N, np.int64)
+    ends = np.zeros(N, np.int64)  # exclusive bit end of each tile's stream
+    parts, cur = [], 0
+    for i, scan in enumerate(scans):
+        offs[i] = cur
+        ends[i] = (cur + scan.size) * 8
+        parts += [scan, np.zeros(_GUARD, np.uint8)]
+        cur += scan.size + _GUARD
+    w64 = _window64(np.concatenate(parts))
+
+    pos = offs * 8
+    u = np.zeros(N, np.int64)  # unit index: block * 3 + component
+    k = np.zeros(N, np.int64)  # next zigzag slot; 0 ⇒ the DC symbol is next
+    zzf = np.zeros(N * nu * 64, np.int32)  # flat (tile, block, comp, slot)
+    base = np.arange(N, dtype=np.int64) * (nu * 64)
+    active = u < nu
+    chroma = (np.arange(nu + 1) % 3 > 0).astype(np.int64)  # unit → table
+    _c48, _c64 = np.uint64(48), np.uint64(64)
+    _m16, _one = np.uint64(0xFFFF), np.uint64(1)
+
+    while active.any():
+        w = w64[pos >> 3]
+        sh = (pos & 7).astype(np.uint64)
+        code = ((w >> (_c48 - sh)) & _m16).astype(np.int64)
+        is_dc = k == 0
+        tbl = np.where(is_dc, 0, 2) + chroma[u]
+        sym = _LUT_SYM[tbl, code]
+        ln = _LUT_LEN[tbl, code]
+        # EOB (0x00) and ZRL (0xF0) have zero magnitude bits by construction
+        s = np.where(is_dc, sym, sym & 0xF)
+        su = s.astype(np.uint64)
+        bits = ((w >> (_c64 - sh - ln.astype(np.uint64) - su))
+                & _MAG_MASK[s]).astype(np.int64)
+        v = np.where(bits >= _MAG_HALF[s], bits, bits - _MAG_EXT[s])
+        pos = np.where(active, pos + ln + s, pos)
+
+        is_eob = ~is_dc & (sym == 0x00)
+        is_zrl = ~is_dc & (sym == 0xF0)
+        is_coef = ~(is_dc | is_eob | is_zrl)
+        # sym >> 4 is 0 for every valid DC category and for EOB; ZRL's
+        # junk value is never read (its k-update uses k + 16 directly)
+        knew = k + (sym >> 4)
+        bad = active & ((ln == 0) | (is_coef & (knew > 63)))
+        if bad.any():
+            if (active & (ln == 0)).any():
+                raise ValueError("corrupt JPEG stream: invalid Huffman code")
+            raise ValueError("corrupt JPEG stream: AC run past end of block")
+
+        # one scatter: the DC differential at slot 0, AC values at slot knew
+        rows = np.flatnonzero(active & (is_dc | is_coef))
+        zzf[base[rows] + u[rows] * 64
+            + np.where(is_dc, 0, knew)[rows]] = v[rows]
+
+        # next slot: DC → 1; ZRL skips 16; a written value advances past
+        # itself; EOB leaves k to be reset below. A run past slot 63 ends
+        # the unit, as in the reference loop's `while k < 64` recheck.
+        k = np.where(is_dc, 1,
+                     np.where(is_zrl, k + 16,
+                              np.where(is_coef, knew + 1, k)))
+        adv = active & (is_eob | (k >= 64))  # k ≥ 64 implies an AC phase
+        u = u + adv
+        k = np.where(adv, 0, k)
+        active = u < nu
+        if (active & (pos > ends)).any():
+            raise ValueError("corrupt JPEG stream: truncated scan data")
+
+    zz = zzf.reshape(N, nb, 3, 64)
+    # integrate the DC differentials (predictor resets at tile boundaries)
+    zz[:, :, :, 0] = np.cumsum(zz[:, :, :, 0], axis=1)
+    return zz
+
+
+def _parse_jfif(jpg: bytes) -> tuple[int, int, int, int]:
+    """Parse one tile's JFIF container → (H, W, scan start, scan end).
+
+    Accepts what ``encode_tile``/``encode_coef_batch`` emit (baseline,
+    4:4:4, standard tables), plus DICOM's even-length convention of one
+    trailing 0x00 pad byte after the EOI marker (encapsulated fragments).
+    Truncated or malformed containers raise ``ValueError("corrupt JPEG
+    …")`` — never ``IndexError``/``struct.error``.
+    """
+    if len(jpg) < 4 or jpg[:2] != b"\xff\xd8":
+        raise ValueError("corrupt JPEG stream: missing SOI marker")
+    end = len(jpg)
+    if jpg[end - 1] == 0x00 and jpg[end - 3:end - 1] == b"\xff\xd9":
+        end -= 1  # DICOM even-length fragment pad
+    if jpg[end - 2:end] != b"\xff\xd9":
+        raise ValueError("corrupt JPEG stream: missing EOI marker")
+    pos = 0
+    H = W = None
+    while pos + 2 <= end:
+        if jpg[pos] != 0xFF:
+            raise ValueError(
+                f"corrupt JPEG stream: expected a marker at offset {pos}")
+        code = jpg[pos + 1]
+        pos += 2
+        if code in (0xD8, 0xD9):
+            continue
+        if pos + 2 > end:
+            raise ValueError("corrupt JPEG stream: truncated marker segment")
+        ln = struct.unpack_from(">H", jpg, pos)[0]
+        if ln < 2 or pos + ln > end:
+            raise ValueError(
+                "corrupt JPEG stream: marker segment overruns container")
+        if code == 0xC0:
+            if ln < 9:
+                raise ValueError("corrupt JPEG stream: short SOF segment")
+            _, H, W, _ = struct.unpack_from(">BHHB", jpg, pos + 2)
+            if not H or not W or H % 8 or W % 8:
+                raise ValueError(
+                    f"corrupt JPEG stream: unsupported frame size {H}x{W}")
+        if code == 0xDA:
+            if H is None:
+                raise ValueError("corrupt JPEG stream: SOS before SOF")
+            start = pos + ln
+            if start > end - 2:
+                raise ValueError("corrupt JPEG stream: no scan data")
+            return H, W, start, end - 2
+        pos += ln
+    raise ValueError("corrupt JPEG stream: no SOS marker")
+
+
+def decode_coef_batch(jpgs: list[bytes]) -> np.ndarray:
+    """N baseline JFIF tiles → (N, 3, H, W) int32 quantized coefficients.
+
+    The host entropy stage of the batched decode path — the exact inverse
+    of ``encode_coef_batch`` (``decode_coef_batch(encode_coef_batch(c))``
+    is coefficient-exact; only the transform stage is lossy). All tiles of
+    a batch must share one geometry, as a pyramid level's frames do.
+    Raises ``ValueError("corrupt JPEG …")`` on truncated/garbage input.
+    """
+    jpgs = list(jpgs)
+    if not jpgs:
+        return np.zeros((0, 3, 0, 0), np.int32)
+    geom = [_parse_jfif(j) for j in jpgs]
+    H, W = geom[0][:2]
+    if any((h, w) != (H, W) for h, w, _, _ in geom):
+        raise ValueError(
+            "corrupt JPEG stream: mixed tile geometries in one batch "
+            f"({sorted({(h, w) for h, w, _, _ in geom})})")
+    scans = [_unstuff(np.frombuffer(jpg, np.uint8, end - start, start))
+             for jpg, (_, _, start, end) in zip(jpgs, geom)]
+    zz = _entropy_decode_batch(scans, H, W)  # (N, nb, 3, 64)
+    N, nb = zz.shape[:2]
+    out = np.empty((N, 3, H * W), np.int32)
+    # scatter back through the encoder's zigzag gather index (its inverse)
+    out[:, :, _zigzag_gather_index(H, W)] = \
+        zz.transpose(0, 2, 1, 3).reshape(N, 3, nb * 64)
+    return out.reshape(N, 3, H, W)
+
+
+def decode_tiles_batch(jpgs: list[bytes]) -> np.ndarray:
+    """N baseline JFIF tiles → (N, H, W, 3) uint8 RGB.
+
+    The whole-level batched decode path: one vectorized entropy-decode
+    pass (``decode_coef_batch``), then a single fused ``jpeg_inverse``
+    dispatch. Output is pixel-identical to ``[decode_tile(j) for j in
+    jpgs]`` — both paths share the one ``jpeg_inverse`` transform, so
+    identity reduces to the (exact, integer) coefficient streams matching.
+    """
+    coef = decode_coef_batch(jpgs)
+    if coef.shape[0] == 0:
+        return np.zeros((0, 0, 0, 3), np.uint8)
+    rgb = np.asarray(jpeg_inverse(coef))
+    return np.ascontiguousarray(rgb.transpose(0, 2, 3, 1))
+
+
+def decode_frames(frames: list[bytes], *, transfer_syntax: str,
+                  rows: int, cols: int) -> np.ndarray:
+    """WADO frame bytes of one WSM instance → (n, rows, cols, 3) uint8 RGB.
+
+    The single transfer-syntax dispatch shared by every store consumer
+    (the export service, the ML-inference subscriber): JPEG-baseline
+    frames go through the batched decode path when there is more than one
+    (the lockstep decoder's win grows with the batch — see
+    BENCH_export.json's ``batch_scaling``; small pulls sit near parity,
+    whole levels win outright), native explicit-VR-LE frames are reshaped
+    directly. Geometry mismatches and unknown syntaxes raise ``ValueError``.
+    """
+    frames = list(frames)
+    n = len(frames)
+    if rows <= 0 or cols <= 0:
+        raise ValueError(f"bad frame geometry {rows}x{cols}")
+    if n == 0:
+        return np.zeros((0, rows, cols, 3), np.uint8)
+    if transfer_syntax == TS_JPEG_BASELINE:
+        rgb = decode_tiles_batch(frames) if n > 1 \
+            else decode_tile(frames[0])[None]
+        if rgb.shape[1:3] != (rows, cols):
+            raise ValueError(
+                f"frames decode to {rgb.shape[1]}x{rgb.shape[2]}, "
+                f"expected {rows}x{cols}")
+        return rgb
+    if transfer_syntax == TS_EXPLICIT_LE:
+        if any(len(f) != rows * cols * 3 for f in frames):
+            raise ValueError(
+                f"native frame size mismatch (expected {rows * cols * 3} "
+                "bytes)")
+        return np.stack([np.frombuffer(f, np.uint8).reshape(rows, cols, 3)
+                         for f in frames])
+    raise ValueError(
+        f"unsupported transfer syntax {transfer_syntax} (JPEG baseline "
+        "and explicit-VR-LE native are decodable)")
 
 
 # --------------------------------------------------------------------------
@@ -559,33 +867,19 @@ def encode_tiles_batch(tiles_rgb: np.ndarray) -> list[bytes]:
 
 
 def decode_tile(jpg: bytes) -> np.ndarray:
-    """Baseline JFIF (as produced by ``encode_tile``) → RGB (H, W, 3) uint8."""
-    pos = 0
-    H = W = None
-    data_start = None
-    while pos < len(jpg):
-        assert jpg[pos] == 0xFF, "marker expected"
-        code = jpg[pos + 1]
-        pos += 2
-        if code in (0xD8, 0xD9):
-            continue
-        ln = struct.unpack_from(">H", jpg, pos)[0]
-        if code == 0xC0:
-            _, H, W, _ = struct.unpack_from(">BHHB", jpg, pos + 2)
-        if code == 0xDA:
-            data_start = pos + ln
-            break
-        pos += ln
-    br = _BitReader(jpg[data_start : len(jpg) - 2])
+    """Baseline JFIF (as produced by ``encode_tile``) → RGB (H, W, 3) uint8.
+
+    The per-tile decode path: a per-symbol Python Huffman loop, then the
+    shared fused ``jpeg_inverse`` transform on a batch of one — kept as
+    the A/B baseline for ``decode_tiles_batch`` (pixel-identical output).
+    Truncated/garbage input raises ``ValueError("corrupt JPEG …")``.
+    """
+    H, W, data_start, data_end = _parse_jfif(jpg)
+    br = _BitReader(jpg[data_start:data_end])
     planes = _decode_blocks(br, H, W)
-    qs = [JPEG_LUMA_Q, JPEG_CHROMA_Q, JPEG_CHROMA_Q]
-    rec = [np.asarray(idct8x8_dequant(planes[i], qs[i])) for i in range(3)]
-    y, cb, cr = rec[0] + 128.0, rec[1], rec[2]
-    r = y + 1.402 * cr
-    g = y - 0.344136 * cb - 0.714136 * cr
-    b = y + 1.772 * cb
-    rgb = np.stack([r, g, b], axis=-1)
-    return np.clip(np.round(rgb), 0, 255).astype(np.uint8)
+    coef = np.stack(planes)[None].astype(np.int32)  # (1, 3, H, W)
+    rgb = np.asarray(jpeg_inverse(coef))[0]
+    return np.ascontiguousarray(rgb.transpose(1, 2, 0))
 
 
 def psnr(a: np.ndarray, b: np.ndarray) -> float:

@@ -13,17 +13,22 @@ claim made concrete — both hang off ``DicomStoreService.topic``
   the store so QIDO/WADO stop serving it.
 * :class:`InferenceSubscriber` — a mock ML model (cf. the Slim viewer's
   model integrations): pulls frames through frame-level WADO
-  (``retrieve_frame`` off the cached index — no full-file reparse) and
-  records a per-instance feature summary, standing in for patch-level
-  inference over the pyramid.
+  (``retrieve_frame`` off the cached index — no full-file reparse),
+  **decodes** them to pixels — the batched decode path
+  (``decode_tiles_batch``) when it pulls more than one frame, the
+  per-tile decoder otherwise — and records per-frame pixel statistics,
+  standing in for patch-level inference over the pyramid.
 """
 from __future__ import annotations
 
 import threading
 
+import numpy as np
+
 from repro.core.pubsub import DeliveryCtx, Message, Subscription
 from repro.core.storage import Bucket
 from repro.wsi.dicom import Part10Index
+from repro.wsi.jpeg import decode_frames
 from repro.wsi.store_service import DicomStoreService
 
 __all__ = ["ValidationService", "InferenceSubscriber"]
@@ -92,7 +97,7 @@ class ValidationService:
 
 
 class InferenceSubscriber:
-    """Mock ML model: frame-level WADO fetches + a toy per-frame feature."""
+    """Mock ML model: frame-level WADO fetches + decoded per-frame stats."""
 
     def __init__(self, store: DicomStoreService, *,
                  name: str = "ml-inference", max_frames: int = 4):
@@ -104,9 +109,11 @@ class InferenceSubscriber:
         self.subscription = Subscription(store.topic, name, self._handle)
 
     @staticmethod
-    def frame_feature(frame: bytes) -> float:
-        """The stand-in embedding: mean byte value of the frame."""
-        return sum(frame) / len(frame) if frame else 0.0
+    def frame_stats(pixels: np.ndarray) -> dict:
+        """The stand-in embedding: decoded-pixel statistics of one frame."""
+        f = pixels.astype(np.float64)
+        return {"mean": float(f.mean()), "std": float(f.std()),
+                "min": int(pixels.min()), "max": int(pixels.max())}
 
     def _handle(self, msg: Message, ctx: DeliveryCtx):
         sop = msg.data["sop_instance_uid"]
@@ -115,19 +122,28 @@ class InferenceSubscriber:
             # instance over-declaring (0028,0008) must not burn redeliveries
             idx = self.store.frame_index(sop)
             n = min(idx.n_frames, self.max_frames)
-            features = [self.frame_feature(self.store.retrieve_frame(sop, i))
-                        for i in range(n)]
+            frames = [self.store.retrieve_frame(sop, i) for i in range(n)]
+            # the shared store-consumer dispatch: batched decode path when
+            # more than one frame is pulled, per-tile decoder otherwise
+            pixels = decode_frames(
+                frames, transfer_syntax=msg.data.get("transfer_syntax"),
+                rows=msg.data.get("rows") or 0,
+                cols=msg.data.get("columns") or 0)
+            stats = [self.frame_stats(pixels[i]) for i in range(n)]
         except (KeyError, ValueError):
-            # quarantined/deleted before we ran, or rotted since storing —
-            # the validation subscriber owns that path; nothing to score
+            # quarantined/deleted before we ran, rotted since storing, or
+            # undecodable ("corrupt JPEG …") — the validation subscriber
+            # owns that path; nothing to score
             ctx.ack()
             return
         with self._lock:
             self.predictions[sop] = {
                 "study_uid": msg.data["study_uid"],
                 "frames_scored": n,
-                "features": features,
+                "pixel_stats": stats,
             }
         self.metrics.inc("inference.instances")
         self.metrics.inc("inference.frames", n)
+        self.metrics.inc("inference.pixels",
+                         int(np.prod(pixels.shape[:3])) if n else 0)
         ctx.ack()

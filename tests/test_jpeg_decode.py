@@ -1,0 +1,189 @@
+"""Batched inverse JPEG path: fused inverse-kernel differential, the
+vectorized entropy decoder vs the per-tile loop (pixel identity +
+coefficient-exact round-trip), and decode hardening against truncated or
+garbage bitstreams."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.kernels import jpeg_inverse, jpeg_transform
+from repro.kernels import ref
+from repro.wsi.jpeg import (decode_coef_batch, decode_tile,
+                            decode_tiles_batch, encode_coef_batch,
+                            encode_tile, encode_tiles_batch)
+from repro.wsi.slide import PSVReader, SyntheticScanner
+
+RNG = np.random.default_rng(13)
+
+
+def _tissue_tiles(n, hw=256, seed=3):
+    rd = PSVReader(SyntheticScanner(seed=seed).scan(1024, 1024, hw))
+    bh, bw = rd.grid
+    tiles = [rd.read_tile(r, c) for r in range(bh) for c in range(bw)]
+    return np.stack((tiles * (n // len(tiles) + 1))[:n])
+
+
+# --------------------------------------------------------------------------
+# fused jpeg_inverse kernel vs jnp oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,h,w", [(1, 8, 128), (2, 64, 128), (3, 32, 256)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_jpeg_inverse_pallas_matches_ref(n, h, w, seed):
+    rng = np.random.default_rng(seed)
+    tiles = rng.integers(0, 256, size=(n, 3, h, w)).astype(np.float32)
+    coef = jpeg_transform(jnp.asarray(tiles))
+    out = jpeg_inverse(coef, impl="pallas")
+    expect = ref.jpeg_inverse_ref(coef)
+    assert out.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_jpeg_inverse_batch_size_independent():
+    """Pixel identity between the batched and per-tile decode paths rests
+    on the fused inverse producing the same bytes for any batch size."""
+    tiles = RNG.integers(0, 256, size=(4, 3, 64, 128)).astype(np.float32)
+    coef = np.asarray(jpeg_transform(jnp.asarray(tiles)))
+    full = np.asarray(jpeg_inverse(coef))
+    for i in range(4):
+        one = np.asarray(jpeg_inverse(coef[i : i + 1]))[0]
+        np.testing.assert_array_equal(one, full[i])
+
+
+def test_jpeg_inverse_roundtrips_transform():
+    """inverse ∘ transform ≈ identity up to quantization loss."""
+    tiles = _tissue_tiles(4)
+    chw = np.transpose(tiles, (0, 3, 1, 2)).astype(np.float32)
+    rec = np.asarray(jpeg_inverse(jpeg_transform(jnp.asarray(chw))))
+    err = np.abs(rec.astype(np.int32) - chw.astype(np.int32)).mean()
+    assert err < 8.0  # q50 baseline quality
+
+
+def test_jpeg_inverse_unaligned_falls_back_to_ref():
+    coef = jnp.asarray(RNG.integers(-64, 64, size=(2, 3, 24, 72)),
+                       jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(jpeg_inverse(coef)),
+        np.asarray(ref.jpeg_inverse_ref(coef)))
+
+
+# --------------------------------------------------------------------------
+# batched entropy decoder vs per-tile reference loop
+# --------------------------------------------------------------------------
+def test_decode_batch_pixel_identical_to_per_tile():
+    jpgs = encode_tiles_batch(_tissue_tiles(6))
+    per = np.stack([decode_tile(j) for j in jpgs])
+    bat = decode_tiles_batch(jpgs)
+    np.testing.assert_array_equal(per, bat)
+
+
+@pytest.mark.parametrize("kind", ["noise", "flat", "gradient"])
+def test_decode_batch_identical_on_adversarial_content(kind):
+    """Worst cases for the lockstep decoder: dense symbols (noise), EOB
+    everywhere with one outlier (flat), smooth DC drift (gradient)."""
+    if kind == "noise":
+        tiles = RNG.integers(0, 256, size=(3, 64, 128, 3)).astype(np.uint8)
+    elif kind == "flat":
+        tiles = np.full((3, 64, 128, 3), 200, np.uint8)
+        tiles[1, 11, 13] = [0, 255, 7]  # one outlier block
+    else:
+        g = np.linspace(0, 255, 64 * 128).reshape(64, 128)
+        one = np.stack([g, g[::-1], 255 - g], axis=-1).astype(np.uint8)
+        tiles = np.stack([one, one[:, ::-1], one[::-1]])
+    jpgs = encode_tiles_batch(tiles)
+    per = np.stack([decode_tile(j) for j in jpgs])
+    np.testing.assert_array_equal(per, decode_tiles_batch(jpgs))
+    np.testing.assert_array_equal(
+        decode_coef_batch(jpgs),
+        np.asarray(jpeg_transform(jnp.asarray(
+            np.transpose(tiles, (0, 3, 1, 2)).astype(np.float32)))))
+
+
+def test_decode_coef_batch_is_exact_inverse():
+    tiles = _tissue_tiles(5)
+    chw = np.transpose(tiles, (0, 3, 1, 2)).astype(np.float32)
+    coef = np.asarray(jpeg_transform(jnp.asarray(chw)))
+    np.testing.assert_array_equal(
+        decode_coef_batch(encode_coef_batch(coef)), coef)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4), st.booleans())
+def test_coef_roundtrip_property(seed, n, sparse):
+    """encode_coef_batch → decode_coef_batch is exact for any in-range
+    coefficient content (random dense and sparse blocks)."""
+    rng = np.random.default_rng(seed)
+    coef = rng.integers(-1023, 1024, size=(n, 3, 16, 16)).astype(np.int32)
+    if sparse:
+        coef *= rng.random(coef.shape) < 0.05  # long zero runs / ZRLs
+    np.testing.assert_array_equal(
+        decode_coef_batch(encode_coef_batch(coef)), coef)
+
+
+def test_decode_batch_empty_and_geometry_guard():
+    assert decode_coef_batch([]).shape == (0, 3, 0, 0)
+    assert decode_tiles_batch([]).shape == (0, 0, 0, 3)
+    a = encode_tile(np.zeros((8, 8, 3), np.uint8))
+    b = encode_tile(np.zeros((16, 16, 3), np.uint8))
+    with pytest.raises(ValueError, match="mixed tile geometries"):
+        decode_coef_batch([a, b])
+
+
+# --------------------------------------------------------------------------
+# hardening: truncated / garbage bitstreams
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tissue_jpg():
+    return encode_tile(_tissue_tiles(1, seed=7)[0])
+
+
+@pytest.mark.parametrize("cut", [0, 1, 2, 3, 19, 0.25, 0.5, 0.9, -1])
+def test_decode_tile_truncation_raises_corrupt(tissue_jpg, cut):
+    """Truncation anywhere — header, tables, or mid-scan — must be the
+    actionable corrupt-JPEG ValueError, never IndexError or a hang."""
+    n = len(tissue_jpg)
+    cut = int(n * cut) if isinstance(cut, float) else (n + cut if cut < 0
+                                                      else cut)
+    with pytest.raises(ValueError, match="corrupt JPEG"):
+        decode_tile(tissue_jpg[:cut])
+    with pytest.raises(ValueError, match="corrupt JPEG"):
+        decode_coef_batch([tissue_jpg[:cut]])
+
+
+def test_decode_tile_garbage_raises_corrupt(tissue_jpg):
+    rng = np.random.default_rng(0)
+    for blob in (b"", b"\xff", b"not a jpeg at all",
+                 rng.integers(0, 256, 512).astype(np.uint8).tobytes(),
+                 tissue_jpg[:30] + b"\x00" * 40):
+        with pytest.raises(ValueError, match="corrupt JPEG"):
+            decode_tile(blob)
+        with pytest.raises(ValueError, match="corrupt JPEG"):
+            decode_coef_batch([blob])
+
+
+def test_decode_tile_scan_bitflip_never_escapes_value_error(tissue_jpg):
+    """Corrupting scan bytes may still decode (a different valid stream) or
+    must raise the corrupt-JPEG error — both decoders, same contract."""
+    from repro.wsi.jpeg import _parse_jfif
+
+    _, _, start, _ = _parse_jfif(tissue_jpg)
+    rng = np.random.default_rng(1)
+    for _ in range(12):
+        mut = bytearray(tissue_jpg)
+        i = rng.integers(start, len(tissue_jpg) - 2)
+        mut[i] ^= 1 << int(rng.integers(0, 8))
+        for api in (decode_tile, lambda b: decode_tiles_batch([b])):
+            try:
+                api(bytes(mut))
+            except ValueError as exc:
+                assert str(exc).startswith("corrupt JPEG")
+
+
+def test_decode_tile_accepts_dicom_even_length_pad(tissue_jpg):
+    """Encapsulated DICOM fragments pad odd-length JPEGs with one 0x00."""
+    padded = tissue_jpg + b"\x00"
+    np.testing.assert_array_equal(decode_tile(padded),
+                                  decode_tile(tissue_jpg))
+    np.testing.assert_array_equal(decode_tiles_batch([padded])[0],
+                                  decode_tile(tissue_jpg))

@@ -250,7 +250,9 @@ def test_validation_sweep_catches_rot_without_events(archive):
     assert validator.sweep() == 0  # stable after quarantine
 
 
-def test_inference_subscriber_scores_frames_via_wado(archive):
+def test_inference_subscriber_scores_decoded_frames_via_wado(archive):
+    from repro.wsi import decode_tile
+
     svc, _, sched = _svc()
     ml = InferenceSubscriber(svc, max_frames=2)
     sops = svc.store_study_archive("studies/x", archive)
@@ -261,9 +263,14 @@ def test_inference_subscriber_scores_frames_via_wado(archive):
                  for m in svc.search_instances(s)
                  if m["sop_instance_uid"] == sop)
         assert pred["frames_scored"] == min(n, 2)
-        assert pred["features"] == [
-            InferenceSubscriber.frame_feature(svc.retrieve_frame(sop, i))
+        # the subscriber decodes with the batched path (>1 frame pulled);
+        # per-tile decode of the same WADO bytes must yield the same stats
+        assert pred["pixel_stats"] == [
+            InferenceSubscriber.frame_stats(
+                decode_tile(svc.retrieve_frame(sop, i)))
             for i in range(pred["frames_scored"])]
+        for st in pred["pixel_stats"]:
+            assert 0 <= st["min"] <= st["mean"] <= st["max"] <= 255
 
 
 def test_identity_move_leaves_no_ghost_study():
