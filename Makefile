@@ -14,15 +14,18 @@ verify: test
 # per-tile ≡ batched ≡ pipelined ≡ concurrent output bytes on small slides
 # AND runs the mixed-format batch (PSV + tiled-TIFF deliveries of the same
 # pixels through one sniffing deployment must emit byte-identical study
-# tars); the store benchmark asserts indexed-WADO byte identity + ≥10x
+# tars) and the fused-engine transfer ledger (1 upload + 1 dispatch per
+# slide); the store benchmark asserts indexed-WADO byte identity + ≥10x
 # plus re-STOW / crash-rebuild QIDO/WADO identity; the export benchmark
-# asserts batched-decode pixel identity + coefficient-exact round-trip,
-# a >1x whole-level decode speedup, and byte-identical repeated /
-# post-rebuild exports that reopen through the TIFF sniffer
+# asserts batched-decode pixel identity + coefficient-exact round-trip
+# and a >1x decode speedup at EVERY batch-scaling point; the kernel
+# benchmark asserts flat batch scaling (no small-batch recompile cliff)
+# and pow2-bucket jit-cache reuse, and writes the roofline terms
 smoke:
 	python -m benchmarks.convert_bench --fast
 	python -m benchmarks.store_bench --fast
 	python -m benchmarks.export_bench --fast
+	python -m benchmarks.kernels_bench --fast
 
 # benchmark suite: paper figures + kernels + conversion + store + export
 # hot paths (writes BENCH_*.json into the working directory)
@@ -31,3 +34,4 @@ bench:
 	python -m benchmarks.convert_bench
 	python -m benchmarks.store_bench
 	python -m benchmarks.export_bench
+	python -m benchmarks.kernels_bench

@@ -1,5 +1,6 @@
 """Render the README benchmark tables from ``BENCH_convert.json`` (and,
-when present, ``BENCH_store.json`` / ``BENCH_export.json``).
+when present, ``BENCH_store.json`` / ``BENCH_export.json`` /
+``BENCH_kernels.json``).
 
     PYTHONPATH=src python -m benchmarks.bench_table [BENCH_convert.json]
 
@@ -130,6 +131,38 @@ def render_export(bench: dict) -> str:
     return "\n".join(lines)
 
 
+def render_kernels(bench: dict) -> str:
+    rb = bench["roofline_batch"]
+    lines = [
+        f"Kernel roofline ({rb['n_tiles']}-tile level batch of "
+        f"{rb['tile']}² tiles, {bench['hw']['name']} targets; terms from "
+        f"the SPMD-partitioned HLO via `roofline.analyze_hlo` + "
+        f"`derive_terms`):",
+        "",
+        "| kernel | devices | bound | compute µs | memory µs | "
+        "collective µs | mfu bound |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for kernel, per_d in bench["roofline"].items():
+        for d, t in sorted(per_d.items(), key=lambda kv: int(kv[0])):
+            lines.append(
+                f"| `{kernel}` | {d} | "
+                f"{t['dominant'].replace('_s', '')} | "
+                f"{t['compute_s']*1e6:.1f} | {t['memory_s']*1e6:.1f} | "
+                f"{t['collective_s']*1e6:.1f} | {t['mfu_bound']:.4f} |")
+    scaling = bench.get("batch_scaling")
+    if scaling:
+        lines += [
+            "",
+            "Batch scaling (fused transform dispatch, µs/tile — flat "
+            "across batch sizes, no small-batch recompile cliff; "
+            "asserted in the run): "
+            + ", ".join(f"{s['transform_us_per_tile']:,.0f} at "
+                        f"n={s['n_tiles']}" for s in scaling) + ".",
+        ]
+    return "\n".join(lines)
+
+
 def main() -> None:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_convert.json"
     with open(path) as f:
@@ -137,7 +170,8 @@ def main() -> None:
     print(render(bench))
     base = os.path.dirname(path) or "."
     for name, renderer in (("BENCH_store.json", render_store),
-                           ("BENCH_export.json", render_export)):
+                           ("BENCH_export.json", render_export),
+                           ("BENCH_kernels.json", render_kernels)):
         extra = os.path.join(base, name)
         if os.path.exists(extra):
             with open(extra) as f:

@@ -45,7 +45,8 @@ import numpy as np
 
 from repro.core import ConversionPipeline, RealScheduler
 from repro.kernels import jpeg_transform
-from repro.wsi.convert import ConvertOptions, convert_wsi_to_dicom
+from repro.wsi.convert import (TRANSFER_STATS, ConvertOptions,
+                               convert_wsi_to_dicom)
 from repro.wsi.dicom import TS_JPEG_BASELINE, new_uid, write_part10
 from repro.wsi.jpeg import encode_coef_batch, encode_tile, encode_tiles_batch
 from repro.wsi.slide import PSVReader, SyntheticScanner
@@ -121,6 +122,16 @@ def _single_slide(slide: int, reps: int) -> dict:
         pipelined=True, manifest={"uids": uids}))
     assert e2e_pipe == e2e_sync, "pipelined study tar diverges from sync"
 
+    # the fused-pyramid round-trip gate: one streamed upload and one
+    # jitted dispatch per slide — the whole pixel pyramid stays on device
+    TRANSFER_STATS.reset()
+    convert_wsi_to_dicom(psv, options=ConvertOptions(pipelined=True))
+    transfers = {"uploads": TRANSFER_STATS.uploads,
+                 "dispatches": TRANSFER_STATS.dispatches,
+                 "coef_fetches": TRANSFER_STATS.fetches}
+    assert TRANSFER_STATS.uploads == 1 and TRANSFER_STATS.dispatches == 1, \
+        f"fused engine issued extra host↔device round trips: {transfers}"
+
     return {
         "slide": {"hw": slide, "tile": TILE, "tiles": n_tiles},
         "stage_us": {
@@ -135,6 +146,7 @@ def _single_slide(slide: int, reps: int) -> dict:
             "bytes_identical": identical,
         },
         "dispatches_per_level": {"per_tile": 4 * n_tiles, "batched": 1},
+        "fused_transfers": transfers,
         "end_to_end": {
             "per_tile_s": t_e2e_p,
             "sync_s": t_e2e_sync,
@@ -326,6 +338,10 @@ def main(argv: list[str] | None = None) -> None:
           f"per_tile={e2e['per_tile_mpix_s']:.2f}")
     print(f"e2e_pipelined_mpix_s,{e2e['pipelined_mpix_s']:.2f},"
           f"speedup_vs_sync={e2e['pipelined_speedup_vs_sync']:.2f}x")
+    tr = result["fused_transfers"]
+    print(f"fused_transfers,ok,uploads={tr['uploads']} "
+          f"dispatches={tr['dispatches']} "
+          f"coef_fetches={tr['coef_fetches']}")
     print(f"batch_sync_s,{ms['sync_s']:.3f},{ms['n_slides']}x{ms['hw']}²")
     print(f"batch_pipelined_s,{ms['pipelined_s']:.3f},"
           f"speedup={ms['pipelined_speedup']:.2f}x")

@@ -3,7 +3,9 @@
 Reads every ``artifacts/dryrun/*.json`` cell, emits CSV + a markdown table
 (written to ``artifacts/roofline.md``), flags HBM violations, and prints the
 three hillclimb candidates (worst mfu-bound, most collective-bound, and the
-paper-representative serving cell).
+paper-representative serving cell). When ``BENCH_kernels.json`` is present
+(``make bench`` / ``kernels_bench.py``), a §WSI kernels section with the
+conversion kernels' per-device-count roofline terms is appended.
 """
 from __future__ import annotations
 
@@ -12,6 +14,7 @@ import json
 from pathlib import Path
 
 ART = Path(__file__).resolve().parents[1] / "artifacts"
+REPO = Path(__file__).resolve().parents[1]
 
 
 def load_cells(mesh: str = "single") -> list[dict]:
@@ -55,6 +58,26 @@ def main():
         n_fail = sum(1 for d in cells if not d.get("ok") and not d.get("skipped"))
         lines.append(f"\ncells={len(cells)} ok={len(ok)} skip={n_skip} "
                      f"fail={n_fail}\n")
+
+    kb = REPO / "BENCH_kernels.json"
+    if kb.exists():
+        bench = json.load(open(kb))
+        rb = bench["roofline_batch"]
+        lines.append(f"\n### WSI conversion kernels "
+                     f"({rb['n_tiles']}×{rb['tile']}² level batch, "
+                     f"{bench['hw']['name']} targets)\n")
+        lines.append("| kernel | devices | dom | compute µs | memory µs "
+                     "| collective µs | useful | mfu_bound |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+        for kernel, per_d in bench["roofline"].items():
+            for d, t in sorted(per_d.items(), key=lambda kv: int(kv[0])):
+                lines.append(
+                    f"| {kernel} | {d} | {t['dominant'].replace('_s','')} "
+                    f"| {t['compute_s']*1e6:.1f} | {t['memory_s']*1e6:.1f} "
+                    f"| {t['collective_s']*1e6:.1f} "
+                    f"| {t['useful_flops_ratio']:.2f} "
+                    f"| {t['mfu_bound']:.4f} |")
+        lines.append("")
     report = "\n".join(lines)
     ART.mkdir(parents=True, exist_ok=True)
     (ART / "roofline.md").write_text(report)

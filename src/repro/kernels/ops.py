@@ -1,15 +1,18 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""Public wrappers over the Pallas kernels: impl dispatch, batch sharding,
+size-bucketed jit.
 
 ``impl`` selects the backend per call:
 
 - ``"auto"`` (default) — the fastest *correct* implementation for this
   environment: on a real TPU (``REPRO_PALLAS_COMPILE=1``) the Pallas kernel
-  lowered natively; otherwise the pure-jnp oracle. Unaligned shapes always
-  fall back to the oracle.
+  lowered natively; otherwise the pure-jnp oracle. Non-lane-aligned shapes
+  run the kernel through an explicit pad-to-aligned + slice path on TPU and
+  fall back to the oracle on CPU.
 - ``"ref"`` — the pure-jnp oracle, unconditionally.
 - ``"pallas"`` — the Pallas kernel, unconditionally; in this environment
   that means ``interpret=True`` (the kernel body executes in Python,
-  validating the BlockSpec tiling). Used by the differential tests.
+  validating the BlockSpec tiling). Unaligned shapes take the padded path
+  (pad + kernel + slice), used by the ragged-shape differential tests.
 
 Interpret mode is a correctness harness, not an execution path — it is
 orders of magnitude slower than the oracle and must never be what ``auto``
@@ -18,14 +21,33 @@ preserves the byte-identity contract between the batched and per-tile JPEG
 paths (DESIGN.md, "Bit-exactness contract"): expression-identical float
 math compiled through *different* machinery (plain XLA vs the interpreter)
 can differ in the last ULP and flip a round-at-half quantization.
+
+**Mesh sharding + bucketing** (DESIGN.md, "Kernel roofline & sharding"):
+the whole-level batched kernels ``jpeg_transform``/``jpeg_inverse`` carry
+an (N, 3, T, T) batch whose leading dimension is embarrassingly parallel —
+every tile's transform is independent. Calls from op-by-op (non-traced)
+code pad N up to the next power of two (so the jit cache holds a handful
+of bucketed executables instead of one per level geometry — the
+small-batch recompile fix), lay the batch out over the ambient mesh's
+``data`` axis with ``jax.sharding.NamedSharding``, and slice the result
+back; calls from inside an enclosing trace (the fused pyramid chain in
+``wsi/convert.py``) keep their static shapes and get a
+``with_sharding_constraint`` instead. Pad tiles are all-zero and sliced
+away, and the per-tile math is batch-size independent (asserted by tests),
+so sharded, bucketed and single-device dispatches all produce bit-identical
+tiles. The ambient mesh defaults to ``make_local_mesh()`` over every
+visible device; ``use_mesh`` scopes an explicit one.
 """
 from __future__ import annotations
 
 import os
+import threading
+from contextlib import contextmanager
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.kernels import ref
 from repro.kernels.dct8x8_quant import dct8x8_quant_pallas
@@ -35,7 +57,8 @@ from repro.kernels.jpeg_transform import jpeg_transform_pallas
 from repro.kernels.rgb2ycbcr import rgb2ycbcr_pallas
 
 __all__ = ["rgb2ycbcr", "downsample2x2", "dct8x8_quant", "idct8x8_dequant",
-           "jpeg_transform", "jpeg_inverse"]
+           "jpeg_transform", "jpeg_inverse", "default_mesh", "use_mesh",
+           "data_sharding"]
 
 
 def _interpret() -> bool:
@@ -46,75 +69,203 @@ def _aligned(n: int, m: int) -> bool:
     return n % m == 0
 
 
-def _dispatch(impl: str, aligned: bool, pallas_fn, ref_fn):
+# --------------------------------------------------------------------------
+# mesh context: which devices whole-level batches are laid out over
+# --------------------------------------------------------------------------
+_MESH_TLS = threading.local()
+
+
+def default_mesh():
+    """The ambient mesh for whole-level batch sharding.
+
+    Defaults (per thread, built lazily so importing this module never
+    touches jax device state) to ``make_local_mesh()`` — every visible
+    device on a ``("data",)`` axis. On the single-device CPU container
+    that is a 1-device mesh and sharding degenerates to replication;
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the
+    multi-device tests) or on a real slice, level batches split N ways.
+    """
+    mesh = getattr(_MESH_TLS, "mesh", None)
+    if mesh is None:
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh()
+        _MESH_TLS.mesh = mesh
+    return mesh
+
+
+@contextmanager
+def use_mesh(mesh):
+    """Scope the ambient mesh (thread-local) for batched kernel dispatch."""
+    prev = getattr(_MESH_TLS, "mesh", None)
+    _MESH_TLS.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _MESH_TLS.mesh = prev
+
+
+def data_sharding(n: int, mesh=None) -> NamedSharding:
+    """Sharding for a leading batch of ``n``: split over ``data`` when it
+    divides evenly, replicated otherwise (a level batch that does not
+    divide must still produce identical bytes, just without the speedup)."""
+    mesh = default_mesh() if mesh is None else mesh
+    ndev = int(mesh.devices.size)
+    spec = P("data") if ndev > 1 and n > 0 and n % ndev == 0 else P()
+    return NamedSharding(mesh, spec)
+
+
+def _bucket(n: int) -> int:
+    """Smallest power of two ≥ n — the jit-cache key for level batch sizes,
+    so arbitrary pyramid geometries reuse a handful of executables."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def _batched_call(x, core, *args):
+    """Shared batch policy for the (N, 3, T, T) kernels.
+
+    Traced operands (the fused pyramid chain) keep their static shape and
+    get a sharding constraint; concrete operands are bucket-padded to the
+    next power of two, laid out over the mesh's data axis, dispatched, and
+    sliced back. Pad tiles are zeros; per-tile math is batch-independent
+    (tested), so the sliced result is bit-identical to the unpadded call.
+    """
+    if isinstance(x, jax.core.Tracer):
+        n = x.shape[0]
+        sh = data_sharding(n)
+        if sh.spec:  # only constrain when actually split over devices
+            x = jax.lax.with_sharding_constraint(x, sh)
+        return core(x, *args)
+    x = jnp.asarray(x)
+    n = x.shape[0]
+    if n == 0:
+        return core(x, *args)
+    nb = _bucket(n)
+    if nb != n:
+        x = jnp.concatenate(
+            [x, jnp.zeros((nb - n,) + x.shape[1:], x.dtype)])
+    x = jax.device_put(x, data_sharding(nb))
+    out = core(x, *args)
+    return out[:n] if nb != n else out
+
+
+def _dispatch(impl: str, aligned: bool, pallas_fn, ref_fn, padded_fn=None):
     """The shared impl policy (see module docstring)."""
     if impl not in ("auto", "ref", "pallas"):
         raise ValueError(f"impl must be 'auto', 'ref' or 'pallas': {impl!r}")
     if impl == "pallas":
-        return pallas_fn(interpret=_interpret())
-    if impl == "ref" or not aligned or _interpret():
+        if aligned or padded_fn is None:
+            return pallas_fn(interpret=_interpret())
+        return padded_fn(interpret=_interpret())
+    if impl == "ref" or _interpret():
         return ref_fn()
-    return pallas_fn(interpret=False)
+    if aligned:
+        return pallas_fn(interpret=False)
+    if padded_fn is None:
+        return ref_fn()
+    return padded_fn(interpret=False)
+
+
+def _pad_hw(x, mh: int, mw: int):
+    """Zero-pad the two trailing axes up to (mh, mw) multiples."""
+    H, W = x.shape[-2], x.shape[-1]
+    ph, pw = -H % mh, -W % mw
+    cfg = [(0, 0)] * (x.ndim - 2) + [(0, ph), (0, pw)]
+    return jnp.pad(x, cfg)
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def rgb2ycbcr(img, impl: str = "auto"):
     """(3, H, W) → (3, H, W) f32 level-shifted YCbCr."""
+    H, W = img.shape[1], img.shape[2]
     return _dispatch(
-        impl, _aligned(img.shape[1], 8) and _aligned(img.shape[2], 128),
+        impl, _aligned(H, 8) and _aligned(W, 128),
         partial(rgb2ycbcr_pallas, img),
-        lambda: ref.rgb2ycbcr_ref(img))
+        lambda: ref.rgb2ycbcr_ref(img),
+        # elementwise → padding is invisible to the retained region
+        lambda **kw: rgb2ycbcr_pallas(_pad_hw(img, 8, 128),
+                                      **kw)[:, :H, :W])
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def downsample2x2(img, impl: str = "auto"):
     """(C, H, W) → (C, H//2, W//2) f32 box-filtered."""
+    H, W = img.shape[1], img.shape[2]
     return _dispatch(
-        impl, _aligned(img.shape[1], 16) and _aligned(img.shape[2], 256),
+        impl, _aligned(H, 16) and _aligned(W, 256),
         partial(downsample2x2_pallas, img),
-        lambda: ref.downsample2x2_ref(img))
+        lambda: ref.downsample2x2_ref(img),
+        # 2×2 boxes are independent; the pad only fills boxes sliced away
+        lambda **kw: downsample2x2_pallas(_pad_hw(img, 16, 256),
+                                          **kw)[:, :H // 2, :W // 2])
 
 
 @partial(jax.jit, static_argnames=("impl",))
 def dct8x8_quant(plane, qtable, impl: str = "auto"):
     """(H, W) f32 → (H, W) i32 quantized DCT coefficients."""
+    H, W = plane.shape
     return _dispatch(
-        impl, _aligned(plane.shape[0], 8) and _aligned(plane.shape[1], 128),
+        impl, _aligned(H, 8) and _aligned(W, 128),
         partial(dct8x8_quant_pallas, plane, qtable),
-        lambda: ref.dct8x8_quant_ref(plane, qtable))
+        lambda: ref.dct8x8_quant_ref(plane, qtable),
+        # 8×8 blocks are independent; padding adds all-zero blocks only
+        lambda **kw: dct8x8_quant_pallas(_pad_hw(plane, 8, 128), qtable,
+                                         **kw)[:H, :W])
 
 
 @partial(jax.jit, static_argnames=("impl",))
+def _jpeg_transform_core(tiles, qluma, qchroma, impl: str = "auto"):
+    H, W = tiles.shape[2], tiles.shape[3]
+    return _dispatch(
+        impl, _aligned(H, 8) and _aligned(W, 128),
+        partial(jpeg_transform_pallas, tiles, qluma, qchroma),
+        lambda: ref.jpeg_transform_ref(tiles, qluma, qchroma),
+        lambda **kw: jpeg_transform_pallas(_pad_hw(tiles, 8, 128), qluma,
+                                           qchroma, **kw)[:, :, :H, :W])
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def _jpeg_inverse_core(coef, qluma, qchroma, impl: str = "auto"):
+    H, W = coef.shape[2], coef.shape[3]
+    return _dispatch(
+        impl, _aligned(H, 8) and _aligned(W, 128),
+        lambda **kw: jpeg_inverse_pallas(
+            coef, qluma, qchroma, **kw).astype(jnp.uint8),
+        lambda: ref.jpeg_inverse_ref(coef, qluma, qchroma),
+        lambda **kw: jpeg_inverse_pallas(
+            _pad_hw(coef, 8, 128), qluma, qchroma,
+            **kw).astype(jnp.uint8)[:, :, :H, :W])
+
+
 def jpeg_transform(tiles, qluma=None, qchroma=None, impl: str = "auto"):
     """(N, 3, T, T) RGB tiles → (N, 3, T, T) i32 quantized YCbCr DCT coefs.
 
-    The whole-level batched dispatch: one kernel launch transform-codes every
-    tile of a pyramid level (fused rgb2ycbcr + per-channel dct8x8_quant).
+    The whole-level batched dispatch: one kernel launch transform-codes
+    every tile of a pyramid level (fused rgb2ycbcr + per-channel
+    dct8x8_quant). The batch dimension is bucket-padded to a power of two
+    and laid out over the ambient mesh's ``data`` axis (see module
+    docstring) — bit-identical to the unsharded, unpadded call.
     """
     qluma = jnp.asarray(ref.JPEG_LUMA_Q) if qluma is None else qluma
     qchroma = jnp.asarray(ref.JPEG_CHROMA_Q) if qchroma is None else qchroma
-    return _dispatch(
-        impl, _aligned(tiles.shape[2], 8) and _aligned(tiles.shape[3], 128),
-        partial(jpeg_transform_pallas, tiles, qluma, qchroma),
-        lambda: ref.jpeg_transform_ref(tiles, qluma, qchroma))
+    return _batched_call(
+        tiles, lambda x, ql, qc: _jpeg_transform_core(x, ql, qc, impl),
+        qluma, qchroma)
 
 
-@partial(jax.jit, static_argnames=("impl",))
 def jpeg_inverse(coef, qluma=None, qchroma=None, impl: str = "auto"):
     """(N, 3, T, T) i32 quantized YCbCr DCT coefs → (N, 3, T, T) u8 RGB.
 
     The whole-level batched inverse dispatch: one kernel launch
     decode-transforms every tile of a stored pyramid level (fused dequant +
     per-channel iDCT + YCbCr→RGB + round/clip) — the device half of the
-    export path's JPEG decoder.
+    export path's JPEG decoder. Bucketed and mesh-sharded exactly like
+    :func:`jpeg_transform`.
     """
     qluma = jnp.asarray(ref.JPEG_LUMA_Q) if qluma is None else qluma
     qchroma = jnp.asarray(ref.JPEG_CHROMA_Q) if qchroma is None else qchroma
-    return _dispatch(
-        impl, _aligned(coef.shape[2], 8) and _aligned(coef.shape[3], 128),
-        lambda **kw: jpeg_inverse_pallas(
-            coef, qluma, qchroma, **kw).astype(jnp.uint8),
-        lambda: ref.jpeg_inverse_ref(coef, qluma, qchroma))
+    return _batched_call(
+        coef, lambda x, ql, qc: _jpeg_inverse_core(x, ql, qc, impl),
+        qluma, qchroma)
 
 
 @jax.jit

@@ -11,14 +11,18 @@ tars regardless of the source container (given the same manifest UIDs) —
 asserted across PSV vs tiled-TIFF in tests and the benchmark.
 
 Three compute paths (see DESIGN.md, "Whole-level batched dispatch" and
-"Pipelined conversion"), all emitting **byte-identical** study tars:
+"Kernel roofline & sharding"), all emitting **byte-identical** study tars:
 
-- **pipelined** (default): the staged, overlapping engine. Level-0 tile
+- **pipelined/fused** (default): the device-resident engine. Level-0 tile
   rows are uploaded to the device as the reader inflates them (no full
-  host ``(H, W, 3)`` array), and JAX async dispatch is used to enqueue the
-  ``jpeg_transform`` + ``downsample2x2`` work for level N+1 on device
-  *before* the host runs the entropy coder + Part-10 wrap for level N
-  (double-buffered coefficient fetch via ``copy_to_host_async``).
+  host ``(H, W, 3)`` array), then the **entire pyramid** — every level's
+  ``jpeg_transform`` and the ``downsample2x2`` chain between levels — is
+  one jitted dispatch (``donate_argnums`` retires the pixel buffer on
+  accelerators). The host consumes per-level coefficients behind async
+  fetches (``copy_to_host_async``), entropy-coding level N while the
+  device is still transforming levels > N. Exactly one host→device upload
+  and one dispatch per slide (counted by ``TRANSFER_STATS``, asserted in
+  the conversion bench).
 - **batched sync** (``ConvertOptions(pipelined=False)``): level 0 is
   uploaded once; every further level is produced by chaining
   ``downsample2x2`` on device, and all tiles of a level are transform-coded
@@ -58,14 +62,15 @@ from __future__ import annotations
 import io
 import json
 import tarfile
-from collections import deque
+from contextlib import nullcontext
+from functools import lru_cache
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import downsample2x2, jpeg_transform
+from repro.kernels import downsample2x2, jpeg_transform, ops as kernel_ops
 from repro.wsi.dicom import (TS_EXPLICIT_LE, TS_JPEG_BASELINE, new_uid,
                              write_part10)
 from repro.wsi.formats import SlideReader, open_slide
@@ -98,20 +103,28 @@ class ConvertOptions:
         original per-tile path (4 dispatches + Python Huffman loop per
         tile), kept for A/B benchmarking.
     pipelined
-        ``True`` (default): the staged overlapping engine — streamed level-0
-        upload and device work for level N+1 enqueued before the host
-        finishes level N. ``False``: strictly sequential stages (the PR-1
-        batched path), kept as the byte-identity A/B baseline. Only
-        effective when ``batched`` and ``jpeg`` are both ``True``.
+        ``True`` (default): the fused device-resident engine — streamed
+        level-0 upload, the whole pyramid (transforms + downsample chain)
+        in one jitted dispatch, async per-level coefficient fetches.
+        ``False``: strictly sequential per-level stages (the PR-1 batched
+        path), kept as the byte-identity A/B baseline. Only effective when
+        ``batched`` and ``jpeg`` are both ``True``.
+    mesh
+        Optional ``jax.sharding.Mesh`` with a ``"data"`` axis: scope the
+        conversion's batched kernel dispatches to this mesh (level batches
+        are split over the axis — see ``kernels.ops.use_mesh``). ``None``
+        (default) uses the ambient mesh (all visible devices). Sharding
+        never changes output bytes, only where tiles are computed.
     """
 
     def __init__(self, *, min_level_size: int = 256, jpeg: bool = True,
                  manifest: dict | None = None, batched: bool = True,
-                 pipelined: bool = True):
+                 pipelined: bool = True, mesh=None):
         self.min_level_size = min_level_size
         self.jpeg = jpeg
         self.batched = batched
         self.pipelined = pipelined
+        self.mesh = mesh
         self.manifest = manifest if manifest is not None else {}
 
     def clear_manifest(self) -> None:
@@ -156,6 +169,31 @@ def _tile_batch(dev: jnp.ndarray, tile: int) -> jnp.ndarray:
             .transpose(1, 3, 0, 2, 4).reshape(bh * bw, 3, tile, tile))
 
 
+class TransferStats:
+    """Host↔device traffic ledger for the fused engine.
+
+    ``uploads`` counts streamed level-0 uploads (one per slide — the strip
+    ``device_put`` calls of a single slide are one logical transfer),
+    ``dispatches`` counts jitted pyramid-chain launches, and ``fetches``
+    counts per-level coefficient downloads. The conversion bench resets
+    this, converts a slide, and asserts ``uploads == 1`` and
+    ``dispatches == 1`` — the "≤1 host↔device round trip per slide"
+    acceptance gate. Counters are advisory (not thread-synchronized);
+    reset + assert from a single thread.
+    """
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self.uploads = 0
+        self.dispatches = 0
+        self.fetches = 0
+
+
+TRANSFER_STATS = TransferStats()
+
+
 def _upload_level0(rd: SlideReader) -> jnp.ndarray:
     """Stream level 0 to the device one tile row at a time.
 
@@ -168,6 +206,7 @@ def _upload_level0(rd: SlideReader) -> jnp.ndarray:
     """
     tile, W = rd.tile, rd.W
     bh, bw = rd.grid
+    TRANSFER_STATS.uploads += 1
     strips = []
     for r in range(bh):
         row = np.empty((3, tile, W), np.float32)
@@ -193,95 +232,117 @@ def _wrap_level(opt: ConvertOptions, li: int, frames: list[bytes], ts: str,
     )
 
 
-# how many chunk transforms may be in flight on the device ahead of the
-# host consumer (bounds device-side coefficient memory to ~LOOKAHEAD chunks,
-# i.e. about two pyramid levels at the default ~4 chunks per level)
-_LOOKAHEAD = 8
-
-
-def _level_chunks(batch: jnp.ndarray, bh: int, bw: int) -> list[jnp.ndarray]:
-    """Split a level's (N, 3, T, T) tile batch into row-aligned chunks.
+def _level_chunks(batch, bh: int, bw: int) -> list:
+    """Split a level's (N, 3, T, T) coefficient batch into row-aligned
+    chunks for the host entropy coder.
 
     Chunk boundaries sit on whole tile rows and each tile is entropy-coded
-    as its own scan, so per-chunk transform + encode emits exactly the
-    frames of the whole-level dispatch, in the same row-major order.
-    Targets ~4 chunks per level so the host consumer always has device
-    work to hide behind, without shrinking the batched dispatch too far.
+    as its own scan, so per-chunk encode emits exactly the frames of a
+    whole-level encode, in the same row-major order. ~4 chunks per level
+    keeps a crash between chunks cheap to resume (each finished level is
+    checkpointed as soon as its last chunk is coded) without shrinking the
+    vectorized encode batches too far.
     """
     rows_per = max(1, bh // 4)
     return [batch[r0 * bw:min(r0 + rows_per, bh) * bw]
             for r0 in range(0, bh, rows_per)]
 
 
+def _pyramid_dims(H: int, W: int,
+                  min_level_size: int) -> list[tuple[int, int]]:
+    """Host-side geometry walk: (H, W) per pyramid level, same stopping
+    rule as the sync engine's device walk."""
+    dims = []
+    while True:
+        dims.append((H, W))
+        if min(H, W) // 2 < min_level_size:
+            return dims
+        H, W = H // 2, W // 2
+
+
+@lru_cache(maxsize=None)
+def _pyramid_chain(n_levels: int, needed: tuple[int, ...], tile: int,
+                   donate: bool, mesh=None):
+    """One jitted dispatch for the whole pyramid.
+
+    The traced graph chains ``downsample2x2`` level to level and emits
+    ``jpeg_transform`` coefficients for every level in ``needed`` (levels
+    already checkpointed in the manifest are skipped — their downsamples
+    still run, because deeper levels derive from them). Fusing the chain
+    means the pixel pyramid never leaves the device: the old engine's
+    per-level dispatch + fetch round trips collapse to a single launch.
+    ``donate=True`` (accelerators only; CPU warns and cannot donate) lets
+    XLA retire the level-0 pixel buffer into the chain's scratch space.
+    ``mesh`` only keys the cache: sharding constraints are baked into the
+    trace from the ambient mesh, so distinct meshes need distinct jits.
+    """
+    def chain(dev):
+        outs = []
+        for li in range(n_levels):
+            if li in needed:
+                outs.append(jpeg_transform(_tile_batch(dev, tile)))
+            if li + 1 < n_levels:
+                dev = jnp.clip(jnp.round(downsample2x2(dev)), 0, 255)
+        return outs
+    kw = {"donate_argnums": (0,)} if donate else {}
+    return jax.jit(chain, **kw)
+
+
 def _convert_pipelined(rd: SlideReader, metadata: dict | None,
                        opt: ConvertOptions, study_uid: str,
                        series_uid: str) -> int:
-    """The staged overlapping engine. Returns the number of levels.
+    """The fused device-resident engine. Returns the number of levels.
 
-    Two passes over the pyramid, connected by JAX async dispatch:
+    One streamed upload, one dispatch, ordered consumption:
 
-    1. **Plan (device walk)** — chain the ``downsample2x2`` pyramid on
-       device and slice every unfinished level's tile batch into row
-       chunks. Nothing is fetched; this just enqueues cheap device work.
-    2. **Windowed transform + consume** — dispatch up to ``_LOOKAHEAD``
-       chunk transforms ahead of the host (each immediately starts its
-       async device→host copy), then consume chunks in order: while the
-       host entropy-codes and Part-10-wraps chunk k, the device is already
-       transforming chunks k+1 … k+_LOOKAHEAD and the remaining pyramid.
+    1. **Upload** — level-0 tile rows go to the device as the reader
+       inflates them (``_upload_level0``); no full host pixel array.
+    2. **Fused pyramid dispatch** — a single jitted call
+       (``_pyramid_chain``) runs every level's ``jpeg_transform`` and the
+       ``downsample2x2`` chain between levels in one traced graph. The
+       dispatch returns immediately (JAX async dispatch); every level's
+       coefficient fetch is started with ``copy_to_host_async`` so
+       downloads overlap the remaining device work.
+    3. **Ordered consume** — levels are entropy-coded and Part-10-wrapped
+       in pyramid order, in row-aligned chunks (``_level_chunks``); each
+       finished level is checkpointed into the manifest immediately, so a
+       crash mid-pyramid resumes from every completed level. While the
+       host codes level N, the device is still transforming levels > N.
 
-    The per-chunk math and the emitted frame order are identical to the
-    sync engine's whole-level dispatch — only host/device overlap changes —
+    The per-tile math and emitted frame order are identical to the sync
+    engine's per-level dispatch — fusion changes only where buffers live —
     so the output bytes are identical (asserted in tests and the bench).
     """
     tile = rd.tile
+    dims = _pyramid_dims(rd.H, rd.W, opt.min_level_size)
+    n_levels = len(dims)
+    needed = tuple(li for li in range(n_levels)
+                   if str(li) not in opt.manifest)
+    if not needed:
+        return n_levels
+
     dev = _upload_level0(rd)
-
-    stream: list[tuple[int, object] | None] = []  # (li, chunk batch)
-    dims: dict[int, tuple[int, int]] = {}
-    remaining: dict[int, int] = {}  # chunks left to consume per level
-    batch = chunks = None
-    li = 0
-    while True:
-        H, W = int(dev.shape[1]), int(dev.shape[2])
-        if str(li) not in opt.manifest:
-            bh, bw = H // tile, W // tile
-            batch = _tile_batch(dev, tile)
-            chunks = [batch] if (bh == 0 or bw == 0) \
-                else _level_chunks(batch, bh, bw)
-            dims[li] = (H, W)
-            remaining[li] = len(chunks)
-            stream += [(li, c) for c in chunks]
-        if min(H, W) // 2 < opt.min_level_size:
-            break
-        dev = jnp.clip(jnp.round(downsample2x2(dev)), 0, 255)
-        li += 1
-    del dev, batch, chunks  # only the stream keeps device references now
-
-    def _dispatch(batch):
-        coef = jpeg_transform(batch)
+    donate = jax.default_backend() != "cpu"
+    outs = _pyramid_chain(n_levels, needed, tile, donate, opt.mesh)(dev)
+    TRANSFER_STATS.dispatches += 1
+    del dev  # donated / retired: the chain owns the pixel pyramid now
+    for coef in outs:
         if hasattr(coef, "copy_to_host_async"):
-            coef.copy_to_host_async()  # start the fetch behind the window
-        return coef
+            coef.copy_to_host_async()
 
-    window: deque[tuple[int, object]] = deque()
-    frames: dict[int, list[bytes]] = {pli: [] for pli in remaining}
-    pos = 0
-    while pos < len(stream) or window:
-        while pos < len(stream) and len(window) < _LOOKAHEAD:
-            pli, batch = stream[pos]
-            stream[pos] = None  # window + XLA now own the chunk's buffers
-            window.append((pli, _dispatch(batch)))
-            pos += 1
-        pli, coef = window.popleft()
-        frames[pli] += encode_coef_batch(np.asarray(coef))
-        remaining[pli] -= 1
-        if remaining[pli] == 0:
-            # checkpoint the level as soon as its last chunk lands, so a
-            # crash mid-conversion resumes from every finished level
-            H, W = dims[pli]
-            _wrap_level(opt, pli, frames.pop(pli), TS_JPEG_BASELINE,
-                        tile, H, W, metadata, study_uid, series_uid)
-    return li + 1
+    for li, coef_dev in zip(needed, outs):
+        H, W = dims[li]
+        coef = np.asarray(coef_dev)
+        TRANSFER_STATS.fetches += 1
+        bh, bw = H // tile, W // tile
+        chunks = [coef] if (bh == 0 or bw == 0) \
+            else _level_chunks(coef, bh, bw)
+        frames: list[bytes] = []
+        for ch in chunks:
+            frames += encode_coef_batch(np.asarray(ch))
+        _wrap_level(opt, li, frames, TS_JPEG_BASELINE, tile, H, W,
+                    metadata, study_uid, series_uid)
+    return n_levels
 
 
 def _convert_sync(rd: SlideReader, metadata: dict | None, opt: ConvertOptions,
@@ -372,11 +433,15 @@ def convert_wsi_to_dicom(slide_bytes: bytes, metadata: dict | None = None,
             f"slide is {rd.H}x{rd.W} with {rd.tile}px tiles — the pyramid "
             "engine requires tile-aligned dimensions (pad the scan)")
     study_uid, series_uid = _study_uids(opt)
-    if opt.pipelined and opt.batched and opt.jpeg:
-        n_levels = _convert_pipelined(rd, metadata, opt, study_uid,
-                                      series_uid)
-    else:
-        n_levels = _convert_sync(rd, metadata, opt, study_uid, series_uid)
+    ctx = kernel_ops.use_mesh(opt.mesh) if opt.mesh is not None \
+        else nullcontext()
+    with ctx:
+        if opt.pipelined and opt.batched and opt.jpeg:
+            n_levels = _convert_pipelined(rd, metadata, opt, study_uid,
+                                          series_uid)
+        else:
+            n_levels = _convert_sync(rd, metadata, opt, study_uid,
+                                     series_uid)
     return _pack_study(opt, n_levels, study_uid, rd.tile)
 
 

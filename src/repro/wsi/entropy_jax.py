@@ -1,0 +1,194 @@
+"""Jitted lockstep JPEG entropy decoder — the small-batch cliff fix.
+
+The numpy lockstep decoder in ``repro.wsi.jpeg`` pays interpreter and
+numpy-dispatch cost once per symbol *position* across the batch (~50–90µs
+per step). A 16-tile level of tissue tiles runs ~10k lockstep steps, so the
+"vectorized" path costs ~800ms of pure interpreter overhead — slower than
+the per-tile Python loop it is supposed to amortize (BENCH_export.json
+recorded 0.82x at 16 tiles). The overhead is per *step*, so no batch-size
+bucketing of the transform kernels can remove it.
+
+This module compiles the identical lockstep automaton into a single
+``jax.lax.while_loop`` dispatch: one compiled step costs a few µs of
+gathers/elementwise work instead of an interpreter sweep, so the batched
+decode path stays ahead of the per-tile loop at **every** batch size — the
+``batch_scaling`` acceptance gate in ``benchmarks/export_bench.py``.
+
+Contract with the numpy engine (``jpeg._entropy_decode_batch``, which
+remains the differential oracle and still serves tiny batches where a
+compile would dominate):
+
+* coefficient-exact equality on every decodable stream — the automaton is
+  a transliteration, step for step, of the numpy loop;
+* identical ``ValueError("corrupt JPEG …")`` strings raised at identical
+  failure points. The compiled loop cannot raise mid-flight, so each lane
+  carries an error flag; the loop exits on the first flagged step, and the
+  host replays the numpy engine's raise priority (invalid Huffman code
+  before AC overrun before truncation — all surviving flags are from the
+  same step, so the replay is exact).
+
+Everything runs in int32 (no x64): the ≤16-bit Huffman code and the ≤11
+magnitude bits are each read through a 24-bit window built from a 3-byte
+gather, so bit cursors stay well under 2^31 for any realistic level
+(callers keep batches below ``2^27`` buffer bytes).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_scans"]
+
+_ERR_INVALID, _ERR_RUN, _ERR_TRUNC = 1, 2, 3
+
+#: per-tile zero bytes after each scan — same layout (and same reason) as
+#: the numpy engine's guard: one step can overrun a corrupt stream's end by
+#: ≤ 27 bits before the truncation flag fires, and the 3-byte windows must
+#: stay inside the buffer
+_GUARD = 8
+
+
+@partial(jax.jit, static_argnames=("nu",))
+def _lockstep(buf, pos0, ends, u0, lut_sym, lut_len, mag_half, mag_ext, *,
+              nu: int):
+    """Run all lanes to completion (or first error). Shapes are the compile
+    key: callers pad the lane count and buffer length to powers of two so
+    every level of a slide reuses a handful of cached executables."""
+    n = pos0.shape[0]
+    total = n * nu * 64
+    base = jnp.arange(n, dtype=jnp.int32) * (nu * 64)
+
+    def cond(st):
+        pos, u, k, err, zzf = st
+        return jnp.any(u < nu) & ~jnp.any(err > 0)
+
+    def body(st):
+        pos, u, k, err, zzf = st
+        active = u < nu
+
+        # 16-bit Huffman window: 3 bytes from the bit cursor's byte
+        bp = pos >> 3
+        w24 = ((buf[bp].astype(jnp.int32) << 16)
+               | (buf[bp + 1].astype(jnp.int32) << 8)
+               | buf[bp + 2].astype(jnp.int32))
+        sh = pos & 7
+        code = (w24 >> (8 - sh)) & 0xFFFF
+        is_dc = k == 0
+        tbl = jnp.where(is_dc, 0, 2) + ((u % 3) != 0)
+        sym = lut_sym[tbl * 65536 + code]
+        ln = lut_len[tbl * 65536 + code]
+
+        # magnitude bits (≤ 11) through a second 3-byte window at pos + ln
+        s = jnp.where(is_dc, sym, sym & 0xF)
+        pos2 = pos + ln
+        bp2 = pos2 >> 3
+        w24m = ((buf[bp2].astype(jnp.int32) << 16)
+                | (buf[bp2 + 1].astype(jnp.int32) << 8)
+                | buf[bp2 + 2].astype(jnp.int32))
+        bits = (w24m >> (24 - (pos2 & 7) - s)) & mag_ext[s]
+        v = jnp.where(bits >= mag_half[s], bits, bits - mag_ext[s])
+        pos = jnp.where(active, pos2 + s, pos)
+
+        is_eob = ~is_dc & (sym == 0x00)
+        is_zrl = ~is_dc & (sym == 0xF0)
+        is_coef = ~(is_dc | is_eob | is_zrl)
+        knew = k + (sym >> 4)
+        err = jnp.where(active & (ln == 0), _ERR_INVALID,
+                        jnp.where(active & is_coef & (knew > 63),
+                                  _ERR_RUN, err))
+
+        # one scatter: DC differential at slot 0, AC values at slot knew;
+        # non-writing lanes aim past the buffer and are dropped
+        write = active & (is_dc | is_coef) & (err == 0)
+        tgt = jnp.where(write, base + u * 64 + jnp.where(is_dc, 0, knew),
+                        total)
+        zzf = zzf.at[tgt].set(v, mode="drop")
+
+        k = jnp.where(is_dc, 1,
+                      jnp.where(is_zrl, k + 16,
+                                jnp.where(is_coef, knew + 1, k)))
+        adv = active & (is_eob | (k >= 64))
+        u = u + adv
+        k = jnp.where(adv, 0, k)
+        err = jnp.where((u < nu) & (err == 0) & (pos > ends),
+                        _ERR_TRUNC, err)
+        return pos, u, k, err, zzf
+
+    state = (pos0, u0, jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32),
+             jnp.zeros(total, jnp.int32))
+    pos, u, k, err, zzf = jax.lax.while_loop(cond, body, state)
+    return err, zzf
+
+
+_TABLES: dict | None = None
+
+
+def _device_tables():
+    """LUTs committed once: the four stacked 16-bit-lookahead Huffman tables
+    (flattened for a single-gather lookup) and the magnitude-decode rows."""
+    global _TABLES
+    if _TABLES is None:
+        from repro.wsi import jpeg
+        _TABLES = {
+            "sym": jnp.asarray(jpeg._LUT_SYM.reshape(-1), jnp.int32),
+            "len": jnp.asarray(jpeg._LUT_LEN.reshape(-1), jnp.int32),
+            "half": jnp.asarray(jpeg._MAG_HALF, jnp.int32),
+            "ext": jnp.asarray(jpeg._MAG_EXT, jnp.int32),
+        }
+    return _TABLES
+
+
+def _pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def decode_scans(scans: list[np.ndarray], H: int, W: int) -> np.ndarray:
+    """N unstuffed scans → (N, nb, 3, 64) int32 zigzag coefficients.
+
+    Drop-in twin of the numpy lockstep engine: same output (DC slots
+    integrated), same error strings. Lane count and buffer length are
+    padded to powers of two so the jit cache stays small; pad lanes start
+    exhausted (``u = nu``) and can neither write nor flag errors.
+    """
+    N = len(scans)
+    nb = (H // 8) * (W // 8)
+    nu = nb * 3
+    npad = _pow2(N)
+
+    offs = np.zeros(npad, np.int64)
+    ends = np.zeros(npad, np.int64)
+    parts, cur = [], 0
+    for i, scan in enumerate(scans):
+        offs[i] = cur
+        ends[i] = (cur + scan.size) * 8
+        parts += [scan, np.zeros(_GUARD, np.uint8)]
+        cur += scan.size + _GUARD
+    buf = np.concatenate(parts) if parts else np.zeros(_GUARD, np.uint8)
+    blen = _pow2(max(buf.size, _GUARD))
+    if blen > buf.size:
+        buf = np.concatenate([buf, np.zeros(blen - buf.size, np.uint8)])
+    assert blen * 8 < 2**31, "scan buffer too large for int32 bit cursors"
+
+    u0 = np.full(npad, nu, np.int32)
+    u0[:N] = 0
+    t = _device_tables()
+    err, zzf = _lockstep(
+        jnp.asarray(buf), jnp.asarray(offs * 8, jnp.int32),
+        jnp.asarray(ends, jnp.int32), jnp.asarray(u0),
+        t["sym"], t["len"], t["half"], t["ext"], nu=nu)
+    err = np.asarray(err)
+    if (err == _ERR_INVALID).any():
+        raise ValueError("corrupt JPEG stream: invalid Huffman code")
+    if (err == _ERR_RUN).any():
+        raise ValueError("corrupt JPEG stream: AC run past end of block")
+    if (err == _ERR_TRUNC).any():
+        raise ValueError("corrupt JPEG stream: truncated scan data")
+
+    zz = np.array(zzf).reshape(npad, nu * 64)[:N].reshape(N, nb, 3, 64)
+    # integrate the DC differentials (predictor resets at tile boundaries)
+    zz[:, :, :, 0] = np.cumsum(zz[:, :, :, 0], axis=1)
+    return zz

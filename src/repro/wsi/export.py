@@ -42,9 +42,11 @@ reason, so after the retry budget it becomes the dead-letter's
 from __future__ import annotations
 
 import threading
+from contextlib import nullcontext
 
 from repro.core.pubsub import DeliveryCtx, Message, Subscription, Topic
 from repro.core.storage import Bucket
+from repro.kernels import ops as kernel_ops
 from repro.wsi.formats import write_tiff
 from repro.wsi.jpeg import decode_frames
 from repro.wsi.store_service import DicomStoreService
@@ -59,15 +61,21 @@ class ExportService:
     ``{"study_uid": …}`` dicts. Pass ``request_topic=None`` to use the
     service as a plain library (direct ``export_study`` calls) without any
     subscription — benchmarks and tests do this.
+
+    ``mesh`` (optional ``jax.sharding.Mesh`` with a ``"data"`` axis) scopes
+    the decode path's batched ``jpeg_inverse`` dispatches: each level's
+    frame batch is split over the mesh's data axis (see
+    ``kernels.ops.use_mesh``). Sharding never changes the exported bytes.
     """
 
     def __init__(self, store: DicomStoreService, derived: Bucket, *,
                  request_topic: Topic | None = None, dlq: Topic | None = None,
                  name: str = "dicom2tiff", ack_deadline: float = 600.0,
                  max_delivery_attempts: int = 5, min_backoff: float = 10.0,
-                 max_backoff: float = 600.0):
+                 max_backoff: float = 600.0, mesh=None):
         self.store = store
         self.derived = derived
+        self.mesh = mesh
         self.metrics = store.metrics
         self._lock = threading.Lock()
         self.exported: list[tuple[str, tuple[str, ...]]] = []
@@ -113,10 +121,14 @@ class ExportService:
         if not metas:
             raise KeyError(f"unknown study {study_uid}")
         keys = []
-        for li, meta in enumerate(metas):
-            key = self._export_level(study_uid, li, meta, skip_unchanged)
-            if key is not None:
-                keys.append(key)
+        ctx = kernel_ops.use_mesh(self.mesh) if self.mesh is not None \
+            else nullcontext()
+        with ctx:
+            for li, meta in enumerate(metas):
+                key = self._export_level(study_uid, li, meta,
+                                         skip_unchanged)
+                if key is not None:
+                    keys.append(key)
         with self._lock:
             self.exported.append((study_uid, tuple(keys)))
         return keys

@@ -187,3 +187,72 @@ def test_decode_tile_accepts_dicom_even_length_pad(tissue_jpg):
                                   decode_tile(tissue_jpg))
     np.testing.assert_array_equal(decode_tiles_batch([padded])[0],
                                   decode_tile(tissue_jpg))
+
+
+# --------------------------------------------------------------------------
+# jitted lockstep entropy engine vs the numpy oracle
+# --------------------------------------------------------------------------
+def _scans(jpgs):
+    """Unstuffed scan arrays + geometry, as _entropy_decode_batch sees
+    them."""
+    from repro.wsi import jpeg as J
+
+    scans, H, W = [], None, None
+    for j in jpgs:
+        H, W, s, e = J._parse_jfif(j)
+        scans.append(J._unstuff(np.frombuffer(j, np.uint8)[s:e]))
+    return scans, H, W
+
+
+@pytest.mark.parametrize("kind", ["noise", "gradient"])
+def test_entropy_engines_coefficient_exact(kind):
+    """engine="jax" (lax.while_loop lockstep) must match engine="numpy"
+    coefficient-for-coefficient, odd batch sizes included (pad lanes)."""
+    from repro.wsi.jpeg import _entropy_decode_batch
+
+    if kind == "noise":
+        tiles = RNG.integers(0, 256, size=(5, 64, 128, 3)).astype(np.uint8)
+    else:
+        g = np.linspace(0, 255, 64 * 128).reshape(64, 128)
+        one = np.stack([g, g[::-1], 255 - g], axis=-1).astype(np.uint8)
+        tiles = np.stack([one, one[:, ::-1], one[::-1]])
+    scans, H, W = _scans(encode_tiles_batch(tiles))
+    np.testing.assert_array_equal(
+        _entropy_decode_batch(scans, H, W, engine="jax"),
+        _entropy_decode_batch(scans, H, W, engine="numpy"))
+
+
+def test_entropy_engines_raise_identical_errors(tissue_jpg):
+    """Both engines must raise the same actionable string at the same
+    failure class: truncation, garbage (invalid Huffman code)."""
+    from repro.wsi.jpeg import _entropy_decode_batch
+
+    scans, H, W = _scans([tissue_jpg] * 2)
+    for mutate in (
+        lambda s: s[: max(4, s.size // 2)],          # mid-stream truncation
+        lambda s: s[:2],                             # near-empty scan
+        lambda s: RNG.integers(0, 256, s.size).astype(np.uint8),  # garbage
+    ):
+        bad = [scans[0], mutate(scans[1].copy())]
+        errs = []
+        for engine in ("jax", "numpy"):
+            with pytest.raises(ValueError, match="corrupt JPEG") as ei:
+                _entropy_decode_batch(bad, H, W, engine=engine)
+            errs.append(str(ei.value))
+        assert errs[0] == errs[1], errs
+
+
+def test_entropy_engine_auto_thresholds():
+    """auto routes big batches to the jitted engine, tiny ones to numpy."""
+    from repro.wsi import jpeg as J
+
+    assert J._JAX_MIN_UNITS > 0 and J._JAX_MAX_BYTES > 0
+    tiles = _tissue_tiles(2)
+    scans, H, W = _scans(encode_tiles_batch(tiles))
+    # 2 tiles × 3072 units ≥ _JAX_MIN_UNITS → the jax engine; equality with
+    # the numpy oracle is the contract either way
+    np.testing.assert_array_equal(
+        J._entropy_decode_batch(scans, H, W),
+        J._entropy_decode_batch(scans, H, W, engine="numpy"))
+    with pytest.raises(ValueError, match="engine"):
+        J._entropy_decode_batch(scans, H, W, engine="cuda")
