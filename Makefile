@@ -20,18 +20,25 @@ verify: test
 # asserts batched-decode pixel identity + coefficient-exact round-trip
 # and a >1x decode speedup at EVERY batch-scaling point; the kernel
 # benchmark asserts flat batch scaling (no small-batch recompile cliff)
-# and pow2-bucket jit-cache reuse, and writes the roofline terms
+# and pow2-bucket jit-cache reuse, and writes the roofline terms; the
+# fleet benchmark asserts the Figure-2 crossover (fleet loses at n=1,
+# wins at n>=10), the Figure-3 ramp/plateau/decay, and the full
+# fault-injection gauntlet (drop/delay/duplicate deliveries + instance
+# kill + shard crash -> zero lost/double-converted, study tars
+# byte-identical to a serial conversion)
 smoke:
 	python -m benchmarks.convert_bench --fast
 	python -m benchmarks.store_bench --fast
 	python -m benchmarks.export_bench --fast
 	python -m benchmarks.kernels_bench --fast
+	python -m benchmarks.fleet_bench --fast
 
 # benchmark suite: paper figures + kernels + conversion + store + export
-# hot paths (writes BENCH_*.json into the working directory)
+# + fleet hot paths (writes BENCH_*.json into the working directory)
 bench:
 	python -m benchmarks.run
 	python -m benchmarks.convert_bench
 	python -m benchmarks.store_bench
 	python -m benchmarks.export_bench
 	python -m benchmarks.kernels_bench
+	python -m benchmarks.fleet_bench

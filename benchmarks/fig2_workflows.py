@@ -44,17 +44,21 @@ def parallel_time(n: int, tau: float, workers: int = 16,
 
 
 def autoscaling_time(n: int, tau: float, *, cold_start: float = 12.0,
-                     max_instances: int = 100) -> float:
+                     max_instances: int = 100, **pipe_kw) -> float:
+    """Batch completion time through the simulated event-driven pipeline.
+
+    Extra ``pipe_kw`` go to :class:`ConversionPipeline` — the fleet bench
+    passes ``fleet={...}`` / ``ordered_ingest=True`` to run the same
+    measurement against the multi-instance converter fleet.
+    """
     sched = SimScheduler()
     pipe = ConversionPipeline(
         sched, service_time=tau, cold_start=cold_start,
-        max_instances=max_instances, scale_down_delay=120.0,
+        max_instances=max_instances, scale_down_delay=120.0, **pipe_kw,
     )
     t0 = sched.now()
     for i in range(n):
         pipe.ingest(f"slides/s{i}.psv", bytes([i % 251]) * 16)
-    done_at = {}
-    target = pipe.done_count
     # run to quiescence; completion time = last conversion completion
     sched.run()
     assert pipe.done_count() == n

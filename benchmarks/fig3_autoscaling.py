@@ -5,18 +5,9 @@ from __future__ import annotations
 from repro.core import ConversionPipeline, SimScheduler
 
 
-def run(n: int = 50, tau: float = 90.0, cold_start: float = 12.0,
-        scale_down_delay: float = 120.0, max_instances: int = 100):
-    sched = SimScheduler()
-    pipe = ConversionPipeline(sched, service_time=tau, cold_start=cold_start,
-                              max_instances=max_instances,
-                              scale_down_delay=scale_down_delay)
-    for i in range(n):
-        pipe.ingest(f"s{i}.psv", bytes([i % 251]) * 8)
-    sched.run()
-    series = pipe.instance_series()
-    # time-weighted per-minute averages of the instance-count step function
-    # (the paper's Figure 3 axis)
+def minute_averages(series: list[tuple[float, float]]) -> list[tuple[int, float]]:
+    """Time-weighted per-minute averages of a step-function timeseries
+    (the paper's Figure 3 axis: avg container instances per minute)."""
     end = max(t for t, _ in series)
     n_min = int(end // 60) + 2
     minutes = []
@@ -37,7 +28,20 @@ def run(n: int = 50, tau: float = 90.0, cold_start: float = 12.0,
             cur, t_prev = v, t
         acc += cur * (hi - t_prev)
         minutes.append((m, round(acc / 60.0, 1)))
-    return minutes, pipe
+    return minutes
+
+
+def run(n: int = 50, tau: float = 90.0, cold_start: float = 12.0,
+        scale_down_delay: float = 120.0, max_instances: int = 100,
+        **pipe_kw):
+    sched = SimScheduler()
+    pipe = ConversionPipeline(sched, service_time=tau, cold_start=cold_start,
+                              max_instances=max_instances,
+                              scale_down_delay=scale_down_delay, **pipe_kw)
+    for i in range(n):
+        pipe.ingest(f"s{i}.psv", bytes([i % 251]) * 8)
+    sched.run()
+    return minute_averages(pipe.instance_series()), pipe
 
 
 def main():

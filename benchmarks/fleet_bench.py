@@ -1,0 +1,296 @@
+"""Institutional-scale converter fleet benchmark (paper Figures 2-3) plus a
+fault-injection gauntlet that proves the fleet's delivery guarantees.
+
+Four sections, all written into ``BENCH_fleet.json``:
+
+* **fig2** — serial vs 16-way parallel vs the event-driven *fleet* (per-
+  instance queues, controller scaling, ordered ingest) at batches of
+  1/10/50 slides. Asserts the paper's crossover: cold start makes the
+  fleet LOSE at n=1 and WIN against both baselines at n>=10.
+* **fig3** — average container instances per minute during a 50-slide
+  burst through the fleet: ramp to a plateau that never exceeds
+  ``max_instances``, then decay back to zero.
+* **sharded_store** — study-UID-hash routing balance across bucket
+  partitions, plus crash-a-shard → ``rebuild_index()`` → byte-identical
+  QIDO/WADO (measured on the gauntlet's real studies).
+* **fault_injection** — the deterministic gauntlet: real JPEG/DICOM
+  conversion under ``SimScheduler`` with pinned study UIDs, while the
+  broker drops, delays, and duplicates deliveries, an instance is killed,
+  and a store shard crashes. Asserts zero lost and zero double-converted
+  slides, no dead-letters, and study tars byte-identical to a serial
+  (no-infrastructure) conversion of the same slides. A backpressure
+  sub-scenario overloads a 2-instance fleet past ``shed_backlog`` and
+  asserts shed work is requeued budget-exempt — never dead-lettered —
+  until it completes.
+
+``--fast`` shrinks the gauntlet workload and skips wall-clock calibration;
+every assertion is identical (the CI smoke runs this mode).
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+
+from benchmarks import fig2_workflows as fig2
+from benchmarks import fig3_autoscaling as fig3
+from repro.core import ConversionPipeline, DeliveryFaults, SimScheduler
+
+TAU = 90.0          # paper: ~90 s per gigapixel conversion on a 16-vCPU VM
+COLD = 12.0         # paper: Cloud Run cold start
+FLEET_BATCHES = (1, 10, 50)
+FLEET_KW = dict(fleet={}, ordered_ingest=True)
+
+
+def _uids_for(slide_id: str) -> list[str]:
+    """Deterministic (study, series) UIDs so the fleet run and the serial
+    baseline mint identical studies — byte-identity needs pinned UIDs."""
+    h = hashlib.sha256(slide_id.encode()).hexdigest()
+    return ["2.25." + str(int(h[:24], 16)),
+            "2.25." + str(int(h[24:48], 16))]
+
+
+def _pinned_convert():
+    from repro.wsi.convert import ConvertOptions, convert_wsi_to_dicom
+
+    def convert(data: bytes, meta: dict) -> bytes:
+        opt = ConvertOptions(
+            manifest={"uids": json.dumps(_uids_for(meta["slide_id"]))})
+        return convert_wsi_to_dicom(data, meta, options=opt)
+
+    return convert
+
+
+# ---------------------------------------------------------------- fig 2
+def _fig2_section(calibrate: bool) -> dict:
+    rows = []
+    if calibrate:
+        tau_meas = fig2.measure_service_time()
+        tau_scaled = tau_meas * (36_000 * 36_000) / (256 * 256)
+        rows.append({"workflow": "calibration", "n": 1,
+                     "seconds": round(tau_meas, 3),
+                     "note": f"measured 256^2; "
+                             f"gigapixel-scaled={tau_scaled:.0f}s"})
+    for n in FLEET_BATCHES:
+        rows.append({"workflow": "serial", "n": n,
+                     "seconds": fig2.serial_time(n, TAU)})
+        rows.append({"workflow": "parallel16", "n": n,
+                     "seconds": fig2.parallel_time(n, TAU)})
+        rows.append({"workflow": "event_driven_fleet", "n": n,
+                     "seconds": round(fig2.autoscaling_time(
+                         n, TAU, cold_start=COLD, **FLEET_KW), 1)})
+    t = {(r["workflow"], r["n"]): r["seconds"] for r in rows
+         if r["workflow"] != "calibration"}
+    assert t[("event_driven_fleet", 1)] > t[("serial", 1)], \
+        "cold start should make the fleet lose at n=1"
+    for n in FLEET_BATCHES[1:]:
+        assert t[("event_driven_fleet", n)] < t[("parallel16", n)] \
+            < t[("serial", n)], f"fleet should win at n={n}"
+    return {
+        "tau_s": TAU, "cold_start_s": COLD, "rows": rows,
+        "crossover": {
+            "loses_at_1": t[("event_driven_fleet", 1)]
+            > t[("serial", 1)],
+            **{f"wins_at_{n}": t[("event_driven_fleet", n)]
+               < t[("parallel16", n)] for n in FLEET_BATCHES[1:]},
+        },
+    }
+
+
+# ---------------------------------------------------------------- fig 3
+def _fig3_section() -> dict:
+    max_instances = 100
+    minutes, pipe = fig3.run(n=50, tau=TAU, cold_start=COLD,
+                             max_instances=max_instances, **FLEET_KW)
+    peak_avg = max(v for _, v in minutes)
+    peak_inst = max(v for _, v in pipe.instance_series())
+    assert peak_avg >= 45, f"should ramp to ~50 instances, got {peak_avg}"
+    assert peak_inst <= max_instances, \
+        f"instance count {peak_inst} exceeded max_instances"
+    assert minutes[-1][1] == 0, "fleet should scale back to zero"
+    return {
+        "n_slides": 50, "max_instances": max_instances,
+        "minutes": [[m, v] for m, v in minutes],
+        "peak_avg_instances": peak_avg,
+        "peak_instantaneous": peak_inst,
+        "decays_to_zero": minutes[-1][1] == 0,
+        "cold_starts": pipe.service.cold_starts,
+    }
+
+
+# ------------------------------------------------------- sharded store
+def _hash_balance(n_shards: int = 4, n_uids: int = 2000) -> dict:
+    from repro.wsi.store_service import ShardedDicomStore
+
+    counts = [0] * n_shards
+    for i in range(n_uids):
+        uid = "2.25." + str(int(
+            hashlib.sha256(f"study-{i}".encode()).hexdigest()[:24], 16))
+        counts[ShardedDicomStore.shard_index_for_uid(uid, n_shards)] += 1
+    lo, hi = min(counts), max(counts)
+    assert hi <= 2 * lo, f"shard hash badly skewed: {counts}"
+    return {"n_shards": n_shards, "n_uids": n_uids, "counts": counts,
+            "max_over_min": round(hi / lo, 3)}
+
+
+# -------------------------------------------------- fault-injection gauntlet
+def _fault_gauntlet(n_slides: int, hw: int) -> dict:
+    from repro.wsi import SyntheticScanner
+    from repro.wsi.formats import sniff
+
+    scanner = SyntheticScanner(seed=11)
+    slides = {f"scans/s{i}.psv": scanner.scan(hw, hw, 256)
+              for i in range(n_slides)}
+    tenants = ("lab-a", "lab-b")
+    meta = {k: {"slide_id": k, "tenant": tenants[i % 2]}
+            for i, k in enumerate(slides)}
+    convert = _pinned_convert()
+
+    # serial baseline: plain function calls, no infrastructure, identical
+    # metadata shape to what the pipeline's worker passes
+    baseline = {}
+    for k, d in slides.items():
+        m = dict(meta[k])
+        m.setdefault("format", sniff(d))
+        baseline[k] = convert(d, m)
+
+    faults = (DeliveryFaults()
+              .drop("s0", attempts=(1,))          # lost push → redelivery
+              .duplicate("s1", lag=1.0)           # double push → dedupe
+              .delay("s2", by=200.0))             # arrives after deadline
+    sched = SimScheduler()
+    pipe = ConversionPipeline(
+        sched, convert=convert, cold_start=COLD, max_instances=4,
+        ack_deadline=120.0, min_backoff=5.0,
+        fleet=dict(instance_queue_depth=2), ordered_ingest=True,
+        store_shards=4, delivery_faults=faults)
+    for k, d in slides.items():
+        pipe.ingest(k, d, meta[k])
+    sched.schedule(5.0, pipe.service.kill_instance)  # churn mid-backlog
+    sched.run()
+
+    # --- zero lost, zero double-converted, nothing dead-lettered ---------
+    assert pipe.dead_lettered == [], \
+        f"work dead-lettered under faults: {pipe.dead_lettered}"
+    out_keys = pipe.dicom.list()
+    assert len(out_keys) == n_slides, \
+        f"{len(out_keys)} studies for {n_slides} slides"
+    writes = int(pipe.metrics.counters["bucket.dicom-store.writes"])
+    assert writes == n_slides, \
+        f"{writes} study-tar writes for {n_slides} slides (double convert?)"
+
+    # --- byte-identical to the serial baseline --------------------------
+    from repro.core.pipeline import derive_out_key
+    for k in slides:
+        got = pipe.dicom.get(derive_out_key(k)).data
+        assert got == baseline[k], f"fleet study tar differs for {k}"
+
+    # --- the faults and the kill actually fired -------------------------
+    assert faults.injected["drop"] >= 1 and faults.injected["duplicate"] >= 1 \
+        and faults.injected["delay"] >= 1, dict(faults.injected)
+    assert int(pipe.metrics.counters["svc.wsi2dcm.killed"]) == 1
+
+    # --- crash a populated shard; rebuild serves identical QIDO/WADO ----
+    ss = pipe.store_service
+    studies = ss.search_studies()
+    assert len(studies) == n_slides
+    dist_before = ss.shard_distribution()
+    uid = studies[0]
+    shard_i = ss.shard_index_for(uid)
+    qido_before = ss.search_instances(uid)
+    wado_before = {m["sop_instance_uid"]: ss.retrieve(m["sop_instance_uid"])
+                   for m in qido_before}
+    ss.crash_shard(shard_i)
+    assert ss.search_instances(uid) == [], \
+        "crash_shard left index state behind"
+    rebuilt = ss.rebuild_index()
+    assert ss.search_instances(uid) == qido_before, \
+        "post-rebuild QIDO differs"
+    for sop, blob in wado_before.items():
+        assert ss.retrieve(sop) == blob, f"post-rebuild WADO differs: {sop}"
+
+    return {
+        "n_slides": n_slides, "slide_hw": hw, "n_shards": 4,
+        "faults_injected": dict(faults.injected),
+        "instance_killed": True,
+        "dead_lettered": 0,
+        "study_tar_writes": writes,
+        "byte_identical_to_serial": True,
+        "shard_distribution": dist_before,
+        "crashed_shard": shard_i,
+        "rebuilt_instances": rebuilt,
+        "crash_rebuild_identical": True,
+        "deliveries": int(
+            pipe.metrics.counters["sub.wsi2dcm-push.deliveries"]),
+        "duplicates_deduped": int(
+            pipe.metrics.counters.get("svc.wsi2dcm.duplicates", 0)),
+        "completion_s": sched.now(),
+    }
+
+
+# ------------------------------------------------------------- backpressure
+def _backpressure_section() -> dict:
+    sched = SimScheduler()
+    pipe = ConversionPipeline(
+        sched, service_time=TAU, cold_start=COLD, max_instances=2,
+        min_backoff=5.0, fleet=dict(shed_backlog=4), ordered_ingest=True,
+        subscribers=False)
+    n = 12
+    for i in range(n):
+        pipe.ingest(f"burst/s{i:02d}.psv", bytes([i]) * 32)
+    sched.run()
+    shed = int(pipe.metrics.counters.get("svc.wsi2dcm.shed", 0))
+    requeues = int(
+        pipe.metrics.counters.get("sub.wsi2dcm-push.requeues", 0))
+    assert pipe.done_count() == n, \
+        f"only {pipe.done_count()}/{n} completed under backpressure"
+    assert shed > 0, "overload never shed"
+    assert requeues >= shed, "sheds were not budget-exempt requeues"
+    assert pipe.dead_lettered == [], "shed work dead-lettered"
+    return {"n_slides": n, "max_instances": 2, "shed_backlog": 4,
+            "shed": shed, "budget_exempt_requeues": requeues,
+            "dead_lettered": 0, "completed": pipe.done_count(),
+            "completion_s": sched.now()}
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: smaller gauntlet, no wall-clock "
+                         "calibration, same assertions")
+    args = ap.parse_args(argv)
+
+    result = {
+        "config": {"tau_s": TAU, "cold_start_s": COLD,
+                   "batches": list(FLEET_BATCHES), "fast": args.fast},
+        "fig2": _fig2_section(calibrate=not args.fast),
+        "fig3": _fig3_section(),
+        "sharded_store": _hash_balance(),
+        "fault_injection": _fault_gauntlet(
+            n_slides=3 if args.fast else 6, hw=256),
+        "backpressure": _backpressure_section(),
+    }
+    with open("BENCH_fleet.json", "w") as f:
+        json.dump(result, f, indent=2)
+
+    print("workflow,n_images,seconds")
+    for r in result["fig2"]["rows"]:
+        print(f"{r['workflow']},{r['n']},{r['seconds']}")
+    print("# claims: fleet loses at n=1 (cold start), wins at n>=10 — OK")
+    print("minute,avg_instances")
+    for m, v in result["fig3"]["minutes"]:
+        print(f"{m},{v}")
+    fi = result["fault_injection"]
+    print(f"faults,{sum(fi['faults_injected'].values())},"
+          f"{fi['faults_injected']} + 1 instance kill + 1 shard crash")
+    print(f"gauntlet,ok,{fi['n_slides']} slides byte-identical to serial, "
+          f"0 lost, 0 double-converted, 0 dead-lettered")
+    bp = result["backpressure"]
+    print(f"backpressure,ok,{bp['shed']} sheds / "
+          f"{bp['budget_exempt_requeues']} requeues, 0 dead-lettered, "
+          f"{bp['completed']}/{bp['n_slides']} completed")
+    print("wrote BENCH_fleet.json")
+
+
+if __name__ == "__main__":
+    main()

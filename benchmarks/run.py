@@ -11,12 +11,14 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import fig2_workflows, fig3_autoscaling, kernels_bench
-    from benchmarks import roofline_report
+    from benchmarks import (fig2_workflows, fig3_autoscaling, fleet_bench,
+                            kernels_bench, roofline_report)
 
     sections = [
         ("fig2_workflows (paper Figure 2)", fig2_workflows.main),
         ("fig3_autoscaling (paper Figure 3)", fig3_autoscaling.main),
+        ("fleet (Figures 2-3 through the converter fleet + fault gauntlet)",
+         lambda: fleet_bench.main([])),
         ("kernels (conversion hot spots)", kernels_bench.main),
         ("roofline (from dry-run artifacts)", roofline_report.main),
     ]

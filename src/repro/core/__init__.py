@@ -8,7 +8,9 @@ under a discrete-event scheduler or on real threads.
 """
 from repro.core.autoscaler import AutoscalingService  # noqa: F401
 from repro.core.clock import RealScheduler, SimScheduler  # noqa: F401
+from repro.core.fleet import ConverterFleet  # noqa: F401
 from repro.core.metrics import Metrics  # noqa: F401
 from repro.core.pipeline import ConversionPipeline  # noqa: F401
-from repro.core.pubsub import DeliveryCtx, Message, Subscription, Topic  # noqa: F401
+from repro.core.pubsub import (DeliveryCtx, DeliveryFaults, Message,  # noqa: F401
+                               Subscription, Topic)
 from repro.core.storage import Bucket, LifecycleRule, Object, ObjectStore  # noqa: F401

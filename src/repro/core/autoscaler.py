@@ -66,6 +66,10 @@ class Instance:
 
 
 class AutoscalingService:
+    #: Instance subclass to spawn — the fleet overrides this with an
+    #: instance type that carries its own local work queue
+    instance_cls = Instance
+
     def __init__(
         self,
         name: str,
@@ -104,7 +108,7 @@ class AutoscalingService:
         # lock held
         iid = next(self._iid)
         delay = 0.0 if warm else self.cold_start
-        inst = Instance(iid, self.scheduler.now() + delay)
+        inst = self.instance_cls(iid, self.scheduler.now() + delay)
         self.instances[iid] = inst
         if not warm:
             self.cold_starts += 1
@@ -153,12 +157,17 @@ class AutoscalingService:
             inst = self.instances.get(iid) if iid else pool[-1]
             if inst is None:
                 return None
-            inst.dead = True
-            inst.state = "stopped"
-            self.instances.pop(inst.iid, None)
-            self.metrics.inc(f"svc.{self.name}.killed")
-            self._record_count()
+            self._kill(inst)
             return inst.iid
+
+    def _kill(self, inst: Instance):
+        # lock held; overridable — the fleet requeues the victim's queued
+        # and in-flight work instead of losing it to the ack deadline
+        inst.dead = True
+        inst.state = "stopped"
+        self.instances.pop(inst.iid, None)
+        self.metrics.inc(f"svc.{self.name}.killed")
+        self._record_count()
 
     def _record_count(self):
         self.metrics.record(
@@ -222,8 +231,16 @@ class AutoscalingService:
             # pool thread: up to `concurrency` of these run in parallel
             self.scheduler.schedule(0.0, self._run_real, inst, req)
         else:
-            duration = float(self.handler(req.payload))
-            self.scheduler.schedule(duration, self._finish, inst, req, True)
+            try:
+                duration = float(self.handler(req.payload))
+            except Exception:
+                # sim-mode failure model: the request fails immediately
+                # (done(False) → nack → broker retry/DLQ path), mirroring
+                # the real-mode _run_real exception path
+                self.scheduler.schedule(0.0, self._finish, inst, req, False)
+            else:
+                self.scheduler.schedule(duration, self._finish, inst, req,
+                                        True)
 
     def _run_real(self, inst: Instance, req: _Request):
         try:
@@ -253,6 +270,11 @@ class AutoscalingService:
             self._drain()
 
     # ---- introspection ---------------------------------------------------------
+    def backlog(self) -> int:
+        """Requests accepted but not yet being served."""
+        with self._lock:
+            return len(self.queue)
+
     def instance_count(self) -> int:
         with self._lock:
             return len([i for i in self.instances.values()

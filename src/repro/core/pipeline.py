@@ -42,6 +42,7 @@ from collections import Counter
 from typing import Callable
 
 from repro.core.autoscaler import AutoscalingService
+from repro.core.fleet import ConverterFleet
 from repro.core.metrics import Metrics
 from repro.core.pubsub import DeliveryCtx, Message, Subscription, Topic
 from repro.core.storage import LifecycleRule, ObjectStore
@@ -87,6 +88,10 @@ class ConversionPipeline:
         auto_export: bool = False,
         lifecycle_cold_after: float = 30 * 24 * 3600.0,
         lifecycle_archive_after: float = 365 * 24 * 3600.0,
+        fleet: dict | None = None,
+        store_shards: int = 1,
+        ordered_ingest: bool = False,
+        delivery_faults=None,
     ):
         self.scheduler = scheduler
         self.metrics = Metrics(scheduler)
@@ -105,22 +110,35 @@ class ConversionPipeline:
         # --- pub/sub messaging service -----------------------------------
         self.topic = Topic("wsi-dicom-conversion", scheduler, self.metrics)
         self.dlq = Topic("wsi-dicom-conversion-dlq", scheduler, self.metrics)
-        self.landing.add_notification(self.topic, "OBJECT_FINALIZE")
+        self.landing.add_notification(self.topic, "OBJECT_FINALIZE",
+                                      ordered=ordered_ingest)
 
         # --- containerized conversion web application ---------------------
-        self.service = AutoscalingService(
-            "wsi2dcm", scheduler, self._work,
+        # `fleet` switches the backend from the single AutoscalingService to
+        # the multi-instance ConverterFleet (per-instance queues, controller
+        # scaling, tenant fairness, load shedding); its dict carries the
+        # fleet-only knobs (instance_queue_depth, tenant_quota, shed_*, ...)
+        common = dict(
             max_instances=max_instances, min_instances=min_instances,
             concurrency=concurrency, cold_start=cold_start,
             scale_down_delay=scale_down_delay, metrics=self.metrics,
             real_work=convert is not None,
         )
+        if fleet is not None:
+            self.service = ConverterFleet(
+                "wsi2dcm", scheduler, self._work,
+                dlq_depth=lambda: len(self.dead_lettered),
+                **common, **fleet)
+        else:
+            self.service = AutoscalingService(
+                "wsi2dcm", scheduler, self._work, **common)
         self.subscription = Subscription(
             self.topic, "wsi2dcm-push", self._endpoint,
             ack_deadline=ack_deadline,
             max_delivery_attempts=max_delivery_attempts,
             min_backoff=min_backoff, max_backoff=max_backoff,
             hedge_after=hedge_after, dlq=self.dlq,
+            faults=delivery_faults,
         )
         self.converted: list[str] = []
         self._conversions: list[tuple[str, str]] = []  # (source, out key)
@@ -141,11 +159,21 @@ class ConversionPipeline:
         # (the Figure-1 final arrow, itself event-driven: study tar lands in
         # the dicom bucket → OBJECT_FINALIZE → ingest subscription → STOW →
         # instance-stored topic → validation / ML fan-out)
-        from repro.wsi.store_service import DicomStoreService
+        from repro.wsi.store_service import (DicomStoreService,
+                                             ShardedDicomStore)
 
-        self.instances = self.store.bucket(instance_bucket)
-        self.store_service = DicomStoreService(
-            self.instances, scheduler, self.metrics)
+        if store_shards > 1:
+            # study-UID-hash sharding across bucket partitions; the shards
+            # share one dicom-instance-stored topic so downstream
+            # subscribers attach exactly as they do to a single store
+            self.instances = None
+            self.store_service = ShardedDicomStore(
+                self.store, scheduler, self.metrics,
+                n_shards=store_shards, bucket_prefix=instance_bucket)
+        else:
+            self.instances = self.store.bucket(instance_bucket)
+            self.store_service = DicomStoreService(
+                self.instances, scheduler, self.metrics)
         self.store_topic = Topic("dicom-study-finalize", scheduler,
                                  self.metrics)
         self.store_dlq = Topic("dicom-store-ingest-dlq", scheduler,
@@ -193,9 +221,16 @@ class ConversionPipeline:
 
     # ---- subscription push endpoint → service --------------------------
     def _endpoint(self, msg: Message, ctx: DeliveryCtx):
-        def done(ok: bool):
-            if ok:
+        def done(ok):
+            if ok is True:
                 ctx.ack()
+                return
+            if ok == "shed":
+                # backpressure, not failure: a budget-exempt nack requeues
+                # after min_backoff without consuming a delivery attempt,
+                # so shed work can never dead-letter
+                ctx.nack("load shed: converter fleet at capacity",
+                         consume_budget=False)
                 return
             with self._converted_lock:
                 reason = self._errors.get(msg.data.get("name"),

@@ -20,7 +20,17 @@ fault-tolerance claims rest on):
   consumers are idempotent so duplicates are harmless. Whichever delivery
   acks first settles the message; a duplicate's nack is recorded but never
   touches the original delivery's outstanding entry, deadline timer, or
-  retry budget.
+  retry budget,
+* **budget-exempt nacks** (backpressure) — ``ctx.nack(reason,
+  consume_budget=False)`` requeues the message after ``min_backoff``
+  *without* incrementing the delivery attempt, so an overloaded consumer
+  shedding load (HTTP-429-style) can push work back indefinitely without
+  ever dead-lettering it; ordered messages keep their key reserved across
+  the requeue,
+* **fault injection** — an optional :class:`DeliveryFaults` schedule on a
+  subscription deterministically drops, delays, or duplicates individual
+  deliveries (the redelivery/dedup machinery above is what the fleet's
+  fault-tolerance tests exercise through it).
 
 The push endpoint is any callable ``endpoint(message, ctx)``; it reports
 completion via ``ctx.ack()`` / ``ctx.nack()`` (asynchronously is fine).
@@ -29,13 +39,15 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import random
 import threading
-from collections import defaultdict, deque
+from collections import Counter, defaultdict, deque
 from typing import Callable
 
 from repro.core.metrics import Metrics
 
-__all__ = ["Message", "Topic", "Subscription", "DeliveryCtx"]
+__all__ = ["Message", "Topic", "Subscription", "DeliveryCtx",
+           "DeliveryFaults"]
 
 _msg_ids = itertools.count(1)
 
@@ -71,6 +83,108 @@ class Topic:
         return msg
 
 
+class DeliveryFaults:
+    """Deterministic delivery-fault schedule for a :class:`Subscription`.
+
+    Two modes, both reproducible:
+
+    * **scripted** — :meth:`drop` / :meth:`delay` / :meth:`duplicate` rules
+      matched against the message (a ``str`` matches as a substring of the
+      payload's ``name`` or the ordering key; a callable is a predicate
+      over the :class:`Message`) and the delivery attempt. Each rule fires
+      at most ``times`` times, so a dropped message's redelivery eventually
+      gets through.
+    * **seeded-random** — :meth:`random` draws each delivery's fate from a
+      ``random.Random(seed)``; the same seed under ``SimScheduler`` yields
+      the same interleaving (the property tests' arrival-trace fuzzing).
+
+    A *dropped* delivery never reaches the endpoint: its context stays
+    outstanding until the ack deadline expires, exercising redelivery (and
+    ordered-key retention). A *delayed* delivery arrives late — possibly
+    after the deadline already redelivered it, exercising consumer-side
+    dedup. A *duplicated* delivery pushes the same context twice; first
+    settlement wins.
+    """
+
+    def __init__(self):
+        self._rules: list[dict] = []
+        self._rng: random.Random | None = None
+        self._p = {"drop": 0.0, "duplicate": 0.0, "delay": 0.0}
+        self._max_delay = 0.0
+        self.injected = Counter()  # action -> times fired
+
+    # ---- scripted rules --------------------------------------------------
+    def _add(self, action: str, match, *, attempts, times, by=0.0, lag=0.0):
+        self._rules.append({"action": action, "match": match,
+                            "attempts": tuple(attempts), "times": times,
+                            "by": by, "lag": lag})
+        return self
+
+    def drop(self, match, *, attempts=(1,), times=1):
+        """Swallow matching deliveries (ack-deadline expiry redelivers)."""
+        return self._add("drop", match, attempts=attempts, times=times)
+
+    def delay(self, match, by: float, *, attempts=(1,), times=1):
+        """Deliver matching messages ``by`` seconds late."""
+        return self._add("delay", match, attempts=attempts, times=times,
+                         by=by)
+
+    def duplicate(self, match, *, lag: float = 0.0, attempts=(1,), times=1):
+        """Push matching deliveries twice (second copy ``lag`` s later)."""
+        return self._add("duplicate", match, attempts=attempts, times=times,
+                         lag=lag)
+
+    @classmethod
+    def random(cls, seed: int, *, p_drop: float = 0.1,
+               p_duplicate: float = 0.1, p_delay: float = 0.2,
+               max_delay: float = 30.0) -> "DeliveryFaults":
+        f = cls()
+        f._rng = random.Random(seed)
+        f._p = {"drop": p_drop, "duplicate": p_duplicate, "delay": p_delay}
+        f._max_delay = max_delay
+        return f
+
+    # ---- the subscription's hook -----------------------------------------
+    @staticmethod
+    def _matches(match, msg: Message) -> bool:
+        if callable(match):
+            return bool(match(msg))
+        hay = str((msg.data or {}).get("name", "")) + "\0" + \
+            str(msg.ordering_key or "")
+        return str(match) in hay
+
+    def plan(self, msg: Message, attempt: int):
+        """→ ``(action, deliver_delay, duplicate_lag | None)``."""
+        if self._rng is not None:
+            r = self._rng.random()
+            if r < self._p["drop"]:
+                self.injected["drop"] += 1
+                return ("drop", 0.0, None)
+            r -= self._p["drop"]
+            if r < self._p["duplicate"]:
+                self.injected["duplicate"] += 1
+                return ("deliver", 0.0,
+                        self._rng.uniform(0.0, self._max_delay))
+            r -= self._p["duplicate"]
+            if r < self._p["delay"]:
+                self.injected["delay"] += 1
+                return ("deliver",
+                        self._rng.uniform(0.0, self._max_delay), None)
+            return ("deliver", 0.0, None)
+        for rule in self._rules:
+            if rule["times"] <= 0 or attempt not in rule["attempts"] \
+                    or not self._matches(rule["match"], msg):
+                continue
+            rule["times"] -= 1
+            self.injected[rule["action"]] += 1
+            if rule["action"] == "drop":
+                return ("drop", 0.0, None)
+            if rule["action"] == "delay":
+                return ("deliver", rule["by"], None)
+            return ("deliver", 0.0, rule["lag"])  # duplicate
+        return ("deliver", 0.0, None)
+
+
 class DeliveryCtx:
     """Ack handle given to push endpoints.
 
@@ -102,13 +216,18 @@ class DeliveryCtx:
         else:
             self.sub._on_ack(self)
 
-    def nack(self, reason: str = ""):
+    def nack(self, reason: str = "", *, consume_budget: bool = True):
+        """Reject the delivery. ``consume_budget=False`` is the
+        backpressure path: the message is requeued after ``min_backoff``
+        with the *same* attempt number, so a load-shedding consumer can
+        push back forever without the message ever dead-lettering."""
         if not self.sub._settle(self):
             return
         if self.hedge_of is not None:
             self.sub._on_hedge_nack(self, reason or "nack")
         else:
-            self.sub._on_nack(self, reason or "nack")
+            self.sub._on_nack(self, reason or "nack",
+                              consume_budget=consume_budget)
 
 
 class Subscription:
@@ -125,6 +244,7 @@ class Subscription:
         max_outstanding: int = 1000,
         hedge_after: float | None = None,
         dlq: Topic | None = None,
+        faults: DeliveryFaults | None = None,
     ):
         self.topic = topic
         self.name = name
@@ -137,6 +257,7 @@ class Subscription:
         self.max_outstanding = max_outstanding
         self.hedge_after = hedge_after
         self.dlq = dlq
+        self.faults = faults
         self.backlog: deque[tuple[Message, int]] = deque()
         self.outstanding: dict[int, DeliveryCtx] = {}
         self.acked: set[int] = set()
@@ -201,7 +322,23 @@ class Subscription:
             ctx.hedge_handle = self.scheduler.schedule(
                 self.hedge_after, self._on_hedge, ctx
             )
-        self.scheduler.schedule(0.0, self._push, ctx)
+        delay, dup_lag = 0.0, None
+        if self.faults is not None:
+            action, delay, dup_lag = self.faults.plan(msg, attempt)
+            if action == "drop":
+                # swallowed: the ctx stays outstanding (ordered key held),
+                # so the ack deadline expires and redelivers — exactly the
+                # lost-HTTP-push failure mode the paper's retries cover
+                self.metrics.inc(f"sub.{self.name}.fault_dropped")
+                return
+            if delay:
+                self.metrics.inc(f"sub.{self.name}.fault_delayed")
+            if dup_lag is not None:
+                # same ctx pushed twice: first settlement wins, consumers
+                # must dedupe (idempotent store / fleet admission)
+                self.metrics.inc(f"sub.{self.name}.fault_duplicated")
+                self.scheduler.schedule(delay + dup_lag, self._push, ctx)
+        self.scheduler.schedule(delay, self._push, ctx)
 
     def _push(self, ctx: DeliveryCtx):
         try:
@@ -253,8 +390,22 @@ class Subscription:
     def _will_retry(self, ctx: DeliveryCtx) -> bool:
         return ctx.attempt < self.max_delivery_attempts
 
-    def _on_nack(self, ctx: DeliveryCtx, reason: str):
+    def _on_nack(self, ctx: DeliveryCtx, reason: str, *,
+                 consume_budget: bool = True):
         self.metrics.inc(f"sub.{self.name}.nacks")
+        if not consume_budget:
+            # backpressure: requeue after min_backoff with the SAME attempt
+            # number — shed work retries until admitted and can never
+            # dead-letter. Ordered messages keep their key reserved.
+            self.metrics.inc(f"sub.{self.name}.requeues")
+            self.metrics.log("requeue", sub=self.name,
+                             id=ctx.msg.message_id, reason=reason)
+            self._cleanup(ctx, release_key=False)
+            held = ctx.msg.ordering_key is not None
+            self.scheduler.schedule(
+                self.min_backoff,
+                lambda: self._enqueue(ctx.msg, ctx.attempt, holds_key=held))
+            return
         # a retried ordered message keeps its key reserved through the
         # backoff; only a dead-letter hands the key to the next message
         self._cleanup(ctx, release_key=not self._will_retry(ctx))

@@ -54,13 +54,17 @@ class Bucket:
         self.metrics = metrics
         self._objects: dict[str, Object] = {}
         self._lock = threading.Lock()
-        self._notify: list[tuple[Topic, str, str]] = []  # (topic, events, prefix)
+        # (topic, events, prefix, ordered)
+        self._notify: list[tuple[Topic, str, str, bool]] = []
         self.lifecycle: list[LifecycleRule] = []
 
     # ---- notification config ---------------------------------------------
     def add_notification(self, topic: Topic, event_types: str = "OBJECT_FINALIZE",
-                         prefix: str = ""):
-        self._notify.append((topic, event_types, prefix))
+                         prefix: str = "", *, ordered: bool = False):
+        """``ordered=True`` keys notifications by object key, so successive
+        events for the same object (re-uploads racing a slow conversion)
+        deliver one-at-a-time in publish order through the broker."""
+        self._notify.append((topic, event_types, prefix, ordered))
 
     def _emit(self, event_type: str, obj: Object):
         payload = {
@@ -73,10 +77,10 @@ class Bucket:
             "storageClass": obj.storage_class,
             "metadata": dict(obj.metadata),
         }
-        for topic, types, prefix in self._notify:
+        for topic, types, prefix, ordered in self._notify:
             if event_type in types and obj.key.startswith(prefix):
                 topic.publish(payload, attributes={"eventType": event_type},
-                              ordering_key=None)
+                              ordering_key=obj.key if ordered else None)
 
     # ---- object ops --------------------------------------------------------
     def put(self, key: str, data: bytes, metadata: dict | None = None,

@@ -27,6 +27,7 @@ demonstrating the extensibility claim.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import threading
 from collections import OrderedDict
@@ -36,7 +37,7 @@ from repro.core.storage import Bucket
 from repro.wsi.convert import study_levels
 from repro.wsi.dicom import Part10Index
 
-__all__ = ["DicomStoreService"]
+__all__ = ["DicomStoreService", "ShardedDicomStore"]
 
 
 class DicomStoreService:
@@ -47,11 +48,15 @@ class DicomStoreService:
     #: retained Part10Index objects for frame-level WADO (LRU)
     FRAME_CACHE = 128
 
-    def __init__(self, bucket: Bucket, scheduler, metrics=None):
+    def __init__(self, bucket: Bucket, scheduler, metrics=None, *,
+                 topic: Topic | None = None):
         self.bucket = bucket
         self.scheduler = scheduler
         self.metrics = metrics or bucket.metrics
-        self.topic = Topic("dicom-instance-stored", scheduler, self.metrics)
+        # shards of a ShardedDicomStore share one instance-stored topic so
+        # downstream subscribers attach once, not once per shard
+        self.topic = topic if topic is not None else \
+            Topic("dicom-instance-stored", scheduler, self.metrics)
         self._lock = threading.RLock()
         self._index: dict[str, dict] = {}  # sop_uid -> metadata
         self._studies: dict[str, list[str]] = {}  # study_uid -> [sop_uid]
@@ -69,15 +74,19 @@ class DicomStoreService:
         self.checkpoint()
         return stored
 
-    def store_instance(self, part10: bytes, *, source: str | None = None) -> str:
+    def store_instance(self, part10: bytes, *, source: str | None = None,
+                       _index: Part10Index | None = None) -> str:
         """Store one Part-10 instance; idempotent per SOP instance UID.
 
         The blob key is derived from the instance identity, so a re-store
         (redelivery, re-upload) replaces rather than duplicates. The
         instance-stored event is published only when the stored bytes are
-        new or changed — identical redeliveries are silent.
+        new or changed — identical redeliveries are silent. ``_index`` lets
+        the sharded router pass its already-parsed structural scan through
+        instead of re-parsing.
         """
-        idx = Part10Index(part10)  # raises ValueError on corrupt input
+        # raises ValueError on corrupt input
+        idx = _index if _index is not None else Part10Index(part10)
         meta = self._meta_from_index(idx, source)
         sop, study = meta["sop_instance_uid"], meta["study_uid"]
         if not sop or not study:
@@ -286,6 +295,11 @@ class DicomStoreService:
         return out
 
     # ---- WADO ----------------------------------------------------------------
+    def read_blob(self, key: str) -> bytes:
+        """Raw blob fetch by store key (the subscribers' re-read path);
+        raises ``KeyError`` when the blob is gone (quarantined/deleted)."""
+        return self.bucket.get(key).data
+
     def _meta(self, sop_instance_uid: str) -> dict:
         with self._lock:
             meta = self._index.get(sop_instance_uid)
@@ -318,3 +332,163 @@ class DicomStoreService:
         """Frame-level WADO: one slice off the cached index — no reparse."""
         self.metrics.inc("dicomstore.wado_frames")
         return self.frame_index(sop_instance_uid).read_frame(frame)
+
+
+class ShardedDicomStore:
+    """Study-UID-hash-sharded DICOM store over N bucket partitions.
+
+    Writes scale with the converter fleet: each study routes to exactly one
+    shard (stable sha-256 hash of the study UID), so N shards take
+    concurrent STOW traffic on N independent buckets, index locks, and
+    checkpoints. Every shard is a full :class:`DicomStoreService` — with
+    its own ``_meta/index.json`` checkpoint and per-shard
+    :meth:`DicomStoreService.rebuild_index` crash recovery — but all
+    shards publish on ONE shared ``dicom-instance-stored`` topic, so the
+    validation/ML subscribers attach once, exactly as for the unsharded
+    store.
+
+    The DICOMweb surface (QIDO/WADO/STOW) is the same as
+    ``DicomStoreService``: study-scoped calls route by hash; cross-study
+    search merges the shards' (already sorted) results into one stable
+    order; SOP-scoped retrieval probes the shard indexes (an O(n_shards)
+    dict lookup, not a scan).
+
+    ``crash_shard(i)`` is the fault-injection hook: it replaces shard *i*
+    with a fresh service over the same bucket — all in-memory index state
+    lost, exactly like an instance restart — after which
+    ``rebuild_index()`` must restore byte-identical QIDO/WADO.
+    """
+
+    def __init__(self, store, scheduler, metrics=None, *, n_shards: int = 4,
+                 bucket_prefix: str = "dicom-instances"):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.scheduler = scheduler
+        self.metrics = metrics if metrics is not None else store.metrics
+        self.n_shards = n_shards
+        self.topic = Topic("dicom-instance-stored", scheduler, self.metrics)
+        self.buckets = [store.bucket(f"{bucket_prefix}-{i:02d}")
+                        for i in range(n_shards)]
+        self.shards = [DicomStoreService(b, scheduler, self.metrics,
+                                         topic=self.topic)
+                       for b in self.buckets]
+
+    # ---- routing ----------------------------------------------------------
+    @staticmethod
+    def shard_index_for_uid(study_uid: str, n_shards: int) -> int:
+        digest = hashlib.sha256(study_uid.encode()).hexdigest()
+        return int(digest[:8], 16) % n_shards
+
+    def shard_index_for(self, study_uid: str) -> int:
+        return self.shard_index_for_uid(study_uid, self.n_shards)
+
+    def shard_for(self, study_uid: str) -> DicomStoreService:
+        return self.shards[self.shard_index_for(study_uid)]
+
+    def _shard_with_sop(self, sop_instance_uid: str) -> DicomStoreService:
+        for shard in self.shards:
+            with shard._lock:
+                if sop_instance_uid in shard._index:
+                    return shard
+        raise KeyError(f"unknown SOP instance {sop_instance_uid}")
+
+    # ---- STOW -------------------------------------------------------------
+    def store_instance(self, part10: bytes, *,
+                       source: str | None = None) -> str:
+        idx = Part10Index(part10)  # raises ValueError on corrupt input
+        study = idx.get_str(0x0020, 0x000D)
+        if not study:
+            raise ValueError(
+                "corrupt Part-10 stream: instance without SOP/study UID")
+        return self.shard_for(study).store_instance(part10, source=source,
+                                                    _index=idx)
+
+    def store_study_archive(self, key: str, archive: bytes) -> list[str]:
+        stored, touched = [], set()
+        for name, blob in study_levels(archive).items():
+            if not name.endswith(".dcm"):
+                continue
+            idx = Part10Index(blob)
+            study = idx.get_str(0x0020, 0x000D)
+            if not study:
+                raise ValueError(
+                    "corrupt Part-10 stream: instance without SOP/study UID")
+            si = self.shard_index_for(study)
+            stored.append(self.shards[si].store_instance(
+                blob, source=f"{key}/{name}", _index=idx))
+            touched.add(si)
+        for si in sorted(touched):
+            self.shards[si].checkpoint()
+        return stored
+
+    def delete_instance(self, sop_instance_uid: str) -> dict:
+        return self._shard_with_sop(sop_instance_uid).delete_instance(
+            sop_instance_uid)
+
+    # ---- durability --------------------------------------------------------
+    def checkpoint(self) -> None:
+        for shard in self.shards:
+            shard.checkpoint()
+
+    def rebuild_index(self) -> int:
+        """Rebuild every shard; returns total blobs re-parsed."""
+        return sum(shard.rebuild_index() for shard in self.shards)
+
+    def crash_shard(self, i: int) -> DicomStoreService:
+        """Fault injection: lose shard *i*'s in-memory state (index,
+        studies map, frame cache) as an abrupt restart would. Its bucket —
+        blobs and checkpoint — survives; ``rebuild_index()`` recovers."""
+        self.shards[i] = DicomStoreService(self.buckets[i], self.scheduler,
+                                           self.metrics, topic=self.topic)
+        self.metrics.inc("dicomstore.shard_crashes")
+        return self.shards[i]
+
+    # ---- QIDO -------------------------------------------------------------
+    def search_studies(self, **filters) -> list[str]:
+        return sorted(study for shard in self.shards
+                      for study in shard.search_studies(**filters))
+
+    def search_instances(self, study_uid: str, **kw) -> list[dict]:
+        return self.shard_for(study_uid).search_instances(study_uid, **kw)
+
+    def study_summary(self, study_uid: str) -> dict:
+        return self.shard_for(study_uid).study_summary(study_uid)
+
+    def search_series(self, study_uid: str | None = None, *,
+                      modality: str | None = None) -> list[dict]:
+        if study_uid is not None:
+            return self.shard_for(study_uid).search_series(
+                study_uid, modality=modality)
+        rows = [row for shard in self.shards
+                for row in shard.search_series(modality=modality)]
+        return sorted(rows, key=lambda r: (r["study_uid"], r["series_uid"]))
+
+    # ---- WADO -------------------------------------------------------------
+    def read_blob(self, key: str) -> bytes:
+        # store keys are "instances/{study}/{series}/{sop}.dcm" — the study
+        # UID in the key routes straight to the owning shard
+        parts = key.split("/")
+        if len(parts) >= 2 and f"{parts[0]}/" == DicomStoreService.PREFIX:
+            return self.shard_for(parts[1]).read_blob(key)
+        raise KeyError(f"not a sharded instance key: {key}")
+
+    def retrieve(self, sop_instance_uid: str) -> bytes:
+        return self._shard_with_sop(sop_instance_uid).retrieve(
+            sop_instance_uid)
+
+    def frame_index(self, sop_instance_uid: str) -> Part10Index:
+        return self._shard_with_sop(sop_instance_uid).frame_index(
+            sop_instance_uid)
+
+    def retrieve_frame(self, sop_instance_uid: str, frame: int) -> bytes:
+        return self._shard_with_sop(sop_instance_uid).retrieve_frame(
+            sop_instance_uid, frame)
+
+    # ---- introspection -----------------------------------------------------
+    def shard_distribution(self) -> list[int]:
+        """Indexed instances per shard (the write-scaling balance check)."""
+        out = []
+        for shard in self.shards:
+            with shard._lock:
+                out.append(len(shard._index))
+        return out

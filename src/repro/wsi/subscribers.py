@@ -50,7 +50,7 @@ class ValidationService:
     def _handle(self, msg: Message, ctx: DeliveryCtx):
         sop = msg.data["sop_instance_uid"]
         try:
-            blob = self.store.bucket.get(msg.data["key"]).data
+            blob = self.store.read_blob(msg.data["key"])
         except KeyError:
             ctx.ack()  # already deleted/quarantined — nothing to validate
             return
@@ -86,7 +86,7 @@ class ValidationService:
         for study in self.store.search_studies():
             for meta in self.store.search_instances(study):
                 try:
-                    blob = self.store.bucket.get(meta["key"]).data
+                    blob = self.store.read_blob(meta["key"])
                     Part10Index(blob).verify()
                 except KeyError:
                     continue
