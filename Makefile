@@ -1,14 +1,22 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test verify smoke bench
+.PHONY: test lint verify smoke bench
 
-# tier-1 verify
+# tier-1 verify (conftest arms lockdep for the whole suite: any lock-order
+# inversion / callback-under-lock / held-too-long / acquired-in-jit
+# violation fails the test that provoked it)
 test:
 	python -m pytest -x -q
 
+# project AST lint rules (see src/repro/analysis/lint.py: bare-lock,
+# wall-clock, unseeded-random, direct-pallas, counter-name,
+# jit-global-mutation); exits nonzero on any finding
+lint:
+	python -m repro.analysis.lint src tests benchmarks
+
 # same entry point, named the way the docs and CI refer to it
-verify: test
+verify: lint test
 
 # CPU byte-identity smoke: the conversion benchmark with --fast asserts
 # per-tile ≡ batched ≡ pipelined ≡ concurrent output bytes on small slides

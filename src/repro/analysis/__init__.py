@@ -1,0 +1,22 @@
+"""Machine-checked concurrency + determinism invariants.
+
+Two legs (DESIGN.md, "Static analysis & lockdep"):
+
+* :mod:`repro.analysis.lockdep` — runtime lock-order instrumentation.
+  Every lock in the event-driven spine is a :class:`~repro.analysis
+  .lockdep.TrackedLock`; arming a detector records the per-thread
+  acquisition graph and flags lock-order-inversion cycles, callbacks
+  invoked under a lock, held-too-long anomalies, and locks acquired
+  inside a jax trace. The tier-1 test suite runs fully armed
+  (``tests/conftest.py``).
+* :mod:`repro.analysis.lint` — AST lint pass with project-specific rules
+  (``make lint`` / the CI ``lint`` job): no bare ``threading.Lock``, no
+  wall-clock reads outside ``core/clock.py``, no unseeded randomness, no
+  ``pallas_call`` outside ``kernels/``, dotted counter names, no
+  module-state mutation inside jit-traced functions.
+"""
+from repro.analysis.lockdep import (LockDep, TrackedLock, Violation, arm,
+                                    capture, check_callback, current, disarm)
+
+__all__ = ["LockDep", "TrackedLock", "Violation", "arm", "disarm",
+           "capture", "check_callback", "current"]

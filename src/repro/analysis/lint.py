@@ -1,0 +1,381 @@
+"""Project-specific AST lint rules (``make lint``, the CI ``lint`` job).
+
+The event-driven spine's correctness rests on conventions a generic linter
+cannot know; each rule below turns one of them into a checked property:
+
+==================== =====================================================
+rule id              invariant
+==================== =====================================================
+bare-lock            no ``threading.Lock()``/``RLock()`` outside
+                     ``analysis/`` — every lock must be a
+                     ``TrackedLock`` so lockdep sees it
+wall-clock           no ``time.time()``/``time.sleep()`` outside
+                     ``core/clock.py`` — wall-clock reads break
+                     SimScheduler determinism; use the scheduler's
+                     ``now()`` or ``core.clock.wall_time``/``wall_sleep``
+unseeded-random      no ``random``/``np.random`` use without an explicit
+                     seed (module-global RNG state is run-order
+                     dependent): ``random.Random(seed)``,
+                     ``np.random.default_rng(seed)`` or
+                     ``jax.random.PRNGKey(seed)`` only
+direct-pallas        no ``pallas_call`` outside ``kernels/`` — every
+                     kernel entry routes through ``ops._dispatch`` /
+                     ``ops._batched_call`` (impl policy, bucketing,
+                     mesh sharding live there exactly once)
+counter-name         first argument of ``metrics.inc``/``metrics.record``
+                     must be dotted ``segment.segment`` lowercase names
+                     (f-string placeholders allowed inside segments)
+jit-global-mutation  no mutation of module-level state inside a
+                     ``jax.jit``-traced function — it runs at trace time
+                     only and silently stops happening once cached
+==================== =====================================================
+
+Suppression: append ``# lint: allow(<rule-id>)`` (comma-separated ids) to
+the offending line, or put it on the line directly above, with a comment
+justifying the exemption. See DESIGN.md "Static analysis & lockdep" for
+how to add a rule.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+
+__all__ = ["lint_file", "lint_paths", "Finding", "RULES"]
+
+RULES = {
+    "bare-lock": "threading.Lock/RLock outside analysis/ (use TrackedLock)",
+    "wall-clock": "time.time()/time.sleep() outside core/clock.py",
+    "unseeded-random": "random/np.random use without an explicit seed",
+    "direct-pallas": "pallas_call referenced outside kernels/",
+    "counter-name": "metrics counter not in dotted segment.segment form",
+    "jit-global-mutation": "module-level state mutated inside jax.jit",
+}
+
+_ALLOW_RE = re.compile(r"lint:\s*allow\(([^)]*)\)")
+
+#: functions on the stdlib ``random`` module that use the hidden global RNG
+_RANDOM_GLOBAL_FNS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "betavariate",
+    "expovariate", "triangular", "getrandbits", "randbytes", "seed",
+}
+#: legacy ``np.random`` functions that use the hidden global RandomState
+_NP_RANDOM_GLOBAL_FNS = {
+    "seed", "random", "rand", "randn", "randint", "random_sample",
+    "normal", "uniform", "choice", "shuffle", "permutation", "standard_normal",
+}
+_MUTATING_METHODS = {
+    "append", "extend", "insert", "add", "update", "setdefault", "pop",
+    "popitem", "remove", "discard", "clear", "appendleft",
+}
+_COUNTER_SEG_RE = re.compile(r"[a-z0-9_\x00]+\Z")
+
+
+class Finding:
+    __slots__ = ("path", "line", "rule", "message")
+
+    def __init__(self, path: str, line: int, rule: str, message: str):
+        self.path, self.line = path, line
+        self.rule, self.message = rule, message
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def __repr__(self):
+        return f"Finding({self})"
+
+
+def _dotted(node: ast.AST) -> str:
+    """``a.b.c`` attribute chain as a string ('' if not a plain chain)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _static_text(node: ast.AST) -> str | None:
+    """Literal / f-string first arg as text, interpolations as ``\\x00``."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.JoinedStr):
+        out = []
+        for part in node.values:
+            if isinstance(part, ast.Constant):
+                out.append(str(part.value))
+            else:
+                out.append("\x00")
+        return "".join(out)
+    return None
+
+
+def _is_jit_decorated(fn: ast.AST) -> bool:
+    """@jax.jit / @jit / @partial(jax.jit, ...) / @jax.jit(...)."""
+    for dec in getattr(fn, "decorator_list", []):
+        target = dec
+        if isinstance(dec, ast.Call):
+            name = _dotted(dec.func)
+            if name in ("functools.partial", "partial") and dec.args:
+                target = dec.args[0]
+            else:
+                target = dec.func
+        name = _dotted(target)
+        if name in ("jax.jit", "jit") or name.endswith(".jit"):
+            return True
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: Path, tree: ast.Module, rel: str):
+        self.path = path
+        self.rel = rel.replace("\\", "/")
+        self.findings: list[Finding] = []
+        self._jit_depth = 0
+        # module-level bindings (for jit-global-mutation): names assigned
+        # at the module's top level
+        self.module_names: set[str] = set()
+        for stmt in tree.body:
+            for tgt in getattr(stmt, "targets", []) or \
+                    ([stmt.target] if isinstance(
+                        stmt, (ast.AnnAssign, ast.AugAssign)) else []):
+                if isinstance(tgt, ast.Name):
+                    self.module_names.add(tgt.id)
+
+    # ---- helpers ----------------------------------------------------------
+    def _report(self, node: ast.AST, rule: str, message: str):
+        self.findings.append(
+            Finding(str(self.path), getattr(node, "lineno", 0), rule,
+                    message))
+
+    def _in(self, *parts: str) -> bool:
+        return any(p in self.rel for p in parts)
+
+    # ---- visitors ----------------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        name = _dotted(node.func)
+        tail = name.rsplit(".", 1)[-1] if name else ""
+
+        # bare-lock -------------------------------------------------------
+        if name in ("threading.Lock", "threading.RLock", "Lock", "RLock") \
+                and tail in ("Lock", "RLock") \
+                and not self._in("/analysis/"):
+            if name.startswith("threading.") or name in ("Lock", "RLock"):
+                self._report(
+                    node, "bare-lock",
+                    f"{name}() — use repro.analysis.lockdep.TrackedLock"
+                    f"{'(reentrant=True)' if tail == 'RLock' else ''} so "
+                    "lockdep can see it")
+
+        # wall-clock ------------------------------------------------------
+        if name in ("time.time", "time.sleep") \
+                and not self.rel.endswith("core/clock.py"):
+            self._report(
+                node, "wall-clock",
+                f"{name}() breaks SimScheduler determinism — use the "
+                "scheduler's now()/schedule(), or core.clock."
+                f"{'wall_time' if tail == 'time' else 'wall_sleep'}() "
+                "for sanctioned wall-clock use")
+
+        # unseeded-random -------------------------------------------------
+        self._check_random(node, name, tail)
+
+        # counter-name ----------------------------------------------------
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("inc", "record") and node.args:
+            text = _static_text(node.args[0])
+            if text is not None:
+                segs = text.split(".")
+                if len(segs) < 2 or not all(
+                        s and _COUNTER_SEG_RE.match(s) for s in segs):
+                    self._report(
+                        node, "counter-name",
+                        f"counter {text.replace(chr(0), '{…}')!r} must be "
+                        "dotted lowercase segment.segment form")
+
+        self.generic_visit(node)
+
+    def _check_random(self, node: ast.Call, name: str, tail: str):
+        if name in ("random.Random",) and not node.args:
+            self._report(node, "unseeded-random",
+                         "random.Random() without a seed argument")
+        elif name.startswith("random.") and tail in _RANDOM_GLOBAL_FNS \
+                and name.count(".") == 1:
+            self._report(
+                node, "unseeded-random",
+                f"{name}() uses the hidden module-global RNG — construct "
+                "random.Random(seed) explicitly")
+        elif name.endswith("random.default_rng") and not node.args:
+            self._report(node, "unseeded-random",
+                         "default_rng() without a seed argument")
+        elif (name.startswith("np.random.") or
+              name.startswith("numpy.random.")) \
+                and tail in _NP_RANDOM_GLOBAL_FNS:
+            self._report(
+                node, "unseeded-random",
+                f"{name}() uses numpy's global RandomState — use "
+                "np.random.default_rng(seed)")
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr == "pallas_call" and not self._in("/kernels/"):
+            self._report(
+                node, "direct-pallas",
+                "pallas_call outside kernels/ — route kernel entries "
+                "through kernels.ops (_dispatch/_batched_call own the "
+                "impl policy, bucketing, and mesh sharding)")
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name):
+        if node.id == "pallas_call" and not self._in("/kernels/"):
+            self._report(
+                node, "direct-pallas",
+                "pallas_call outside kernels/ — route kernel entries "
+                "through kernels.ops (_dispatch/_batched_call)")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if not self._in("/kernels/"):
+            for alias in node.names:
+                if alias.name == "pallas_call":
+                    self._report(
+                        node, "direct-pallas",
+                        "importing pallas_call outside kernels/")
+        self.generic_visit(node)
+
+    # ---- jit-global-mutation ----------------------------------------------
+    def _visit_function(self, node):
+        jitted = _is_jit_decorated(node)
+        if jitted:
+            self._jit_depth += 1
+        self.generic_visit(node)
+        if jitted:
+            self._jit_depth -= 1
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def visit_Global(self, node: ast.Global):
+        if self._jit_depth:
+            self._report(
+                node, "jit-global-mutation",
+                f"global {', '.join(node.names)} inside a jit-traced "
+                "function — the mutation happens at trace time only and "
+                "stops happening once the trace is cached")
+        self.generic_visit(node)
+
+    def _root_name(self, node: ast.AST) -> str | None:
+        while isinstance(node, (ast.Attribute, ast.Subscript)):
+            node = node.value
+        return node.id if isinstance(node, ast.Name) else None
+
+    def _check_jit_store(self, target: ast.AST, node: ast.AST):
+        if isinstance(target, (ast.Subscript, ast.Attribute)):
+            root = self._root_name(target)
+            if root in self.module_names:
+                self._report(
+                    node, "jit-global-mutation",
+                    f"module-level {root!r} mutated inside a jit-traced "
+                    "function — trace-time side effect, silently dropped "
+                    "on cached executions")
+
+    def visit_Assign(self, node: ast.Assign):
+        if self._jit_depth:
+            for tgt in node.targets:
+                self._check_jit_store(tgt, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        if self._jit_depth:
+            self._check_jit_store(node.target, node)
+        self.generic_visit(node)
+
+    def visit_Expr(self, node: ast.Expr):
+        # CACHE.update(...) / CACHE.append(...) on a module-level name
+        if self._jit_depth and isinstance(node.value, ast.Call) \
+                and isinstance(node.value.func, ast.Attribute) \
+                and node.value.func.attr in _MUTATING_METHODS:
+            root = self._root_name(node.value.func.value)
+            if root in self.module_names:
+                self._report(
+                    node, "jit-global-mutation",
+                    f"module-level {root!r}.{node.value.func.attr}() "
+                    "inside a jit-traced function — trace-time side "
+                    "effect, silently dropped on cached executions")
+        self.generic_visit(node)
+
+
+def _allowed(lines: list[str], finding: Finding) -> bool:
+    """``# lint: allow(rule)`` on the finding's line or the line above."""
+    for ln in (finding.line, finding.line - 1):
+        if 1 <= ln <= len(lines):
+            m = _ALLOW_RE.search(lines[ln - 1])
+            if m and finding.rule in \
+                    {s.strip() for s in m.group(1).split(",")}:
+                return True
+    return False
+
+
+def lint_file(path: Path, root: Path | None = None) -> list[Finding]:
+    src = path.read_text(encoding="utf-8")
+    rel = str(path.resolve())
+    if root is not None:
+        try:
+            rel = str(path.resolve().relative_to(root.resolve()))
+        except ValueError:
+            pass
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as exc:
+        return [Finding(str(path), exc.lineno or 0, "syntax",
+                        f"unparseable: {exc.msg}")]
+    linter = _Linter(path, tree, "/" + rel)
+    linter.visit(tree)
+    lines = src.splitlines()
+    return [f for f in linter.findings if not _allowed(lines, f)]
+
+
+def lint_paths(paths: list[Path], root: Path | None = None) -> list[Finding]:
+    files: list[Path] = []
+    for p in paths:
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    findings: list[Finding] = []
+    for f in files:
+        findings.extend(lint_file(f, root=root))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.lint",
+        description="project lint rules (see module docstring)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests",
+                                                 "benchmarks"],
+                    help="files or directories to lint")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rid, desc in RULES.items():
+            print(f"{rid:22s} {desc}")
+        return 0
+    root = Path.cwd()
+    findings = lint_paths([Path(p) for p in args.paths], root=root)
+    for f in findings:
+        print(f)
+    n_files = len({f.path for f in findings})
+    if findings:
+        print(f"lint: {len(findings)} finding(s) in {n_files} file(s)")
+        return 1
+    print("lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

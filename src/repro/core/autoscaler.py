@@ -34,10 +34,10 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import threading
 from collections import deque
 from typing import Callable
 
+from repro.analysis.lockdep import TrackedLock, check_callback
 from repro.core.metrics import Metrics
 
 __all__ = ["AutoscalingService", "Instance"]
@@ -97,7 +97,8 @@ class AutoscalingService:
         self.instances: dict[int, Instance] = {}
         self.queue: deque[_Request] = deque()
         self._iid = itertools.count(1)
-        self._lock = threading.RLock()
+        self._lock = TrackedLock(f"AutoscalingService[{name}]._lock",
+                                 reentrant=True)
         self.cold_starts = 0
         with self._lock:
             for _ in range(min_instances):
@@ -243,6 +244,9 @@ class AutoscalingService:
                                         True)
 
     def _run_real(self, inst: Instance, req: _Request):
+        # real-work handlers must run lock-free (PR 2's invariant; the
+        # sim-mode service-time model is the one sanctioned exception)
+        check_callback(f"svc.{self.name}.handler")
         try:
             self.handler(req.payload)
             ok = True
@@ -265,6 +269,7 @@ class AutoscalingService:
             )
         # ack/nack outside the lock: it may re-enter receive() via the
         # subscription's redelivery pump
+        check_callback(f"svc.{self.name}.done")
         req.done(ok)
         with self._lock:
             self._drain()

@@ -19,7 +19,30 @@ import threading
 import time
 from typing import Callable
 
-__all__ = ["SimScheduler", "RealScheduler", "Handle"]
+from repro.analysis.lockdep import TrackedLock
+
+__all__ = ["SimScheduler", "RealScheduler", "Handle", "wall_time",
+           "wall_sleep"]
+
+
+def wall_time() -> float:
+    """The single sanctioned wall-clock read (epoch seconds).
+
+    Everything inside the event-driven spine must use its scheduler's
+    ``now()`` so SimScheduler runs stay deterministic; CLI launchers and
+    checkpoint stamps that genuinely want wall time route through here
+    (the ``wall-clock`` lint rule allows this module only).
+    """
+    return time.time()
+
+
+def wall_sleep(seconds: float) -> None:
+    """Sanctioned wall-clock sleep — real-scheduler polls in tests only.
+
+    Never call this from code that can run under ``SimScheduler``; use
+    ``scheduler.schedule(delay, fn)`` instead.
+    """
+    time.sleep(seconds)
 
 
 class Handle:
@@ -87,7 +110,7 @@ class RealScheduler:
 
         self._t0 = time.monotonic()
         self._pool = cf.ThreadPoolExecutor(max_workers=workers)
-        self._lock = threading.Lock()
+        self._lock = TrackedLock("RealScheduler._lock")
         self._inflight = 0
         self._quiet = threading.Condition(self._lock)
         self._timers: set = set()

@@ -44,6 +44,7 @@ import math
 from collections import deque
 from typing import Callable
 
+from repro.analysis.lockdep import check_callback
 from repro.core.autoscaler import AutoscalingService, Instance, _req_ids
 
 __all__ = ["ConverterFleet", "FleetInstance"]
@@ -160,6 +161,7 @@ class ConverterFleet(AutoscalingService):
                 return
         # completion callbacks always run outside the lock (they re-enter
         # the broker, which may re-enter receive)
+        check_callback(f"svc.{self.name}.done")
         done(True if verdict == "done" else "shed")
 
     def _admit(self, req: _FleetRequest):
@@ -356,11 +358,10 @@ class ConverterFleet(AutoscalingService):
                 "active": sum(i.active for i in self.instances.values()
                               if not i.dead),
                 "cold_starts": self.cold_starts,
-                "shed": int(self.metrics.counters.get(
-                    f"svc.{self.name}.shed", 0)),
-                "requeued": int(self.metrics.counters.get(
-                    f"svc.{self.name}.requeued", 0)),
-                "duplicates": int(self.metrics.counters.get(
-                    f"svc.{self.name}.duplicates", 0)),
+                "shed": int(self.metrics.get(f"svc.{self.name}.shed")),
+                "requeued": int(
+                    self.metrics.get(f"svc.{self.name}.requeued")),
+                "duplicates": int(
+                    self.metrics.get(f"svc.{self.name}.duplicates")),
                 "tenants": {t: n for t, n in self._tenant_load.items() if n},
             }

@@ -1,9 +1,21 @@
 """Shared metrics/logging — the paper's "all services log to one location,
-monitored through a single dashboard"."""
+monitored through a single dashboard".
+
+Thread-safety (PR 8 lockdep audit): every mutation — ``inc``'s
+read-modify-write on the counters dict, ``record``/``log`` appends — runs
+under one :class:`TrackedLock`, because pool threads (fleet instances,
+subscription settlements, store subscribers) all hit one shared ``Metrics``
+concurrently; an unguarded ``counters[name] += v`` loses increments under
+that interleaving. Readers either snapshot under the lock
+(``timeseries``/``summary``) or go through :meth:`get`, which takes the
+lock for the same reason. The lock is a leaf: nothing is called while it
+is held, so it can never participate in an ordering cycle.
+"""
 from __future__ import annotations
 
-import threading
 from collections import defaultdict
+
+from repro.analysis.lockdep import TrackedLock
 
 __all__ = ["Metrics"]
 
@@ -11,7 +23,7 @@ __all__ = ["Metrics"]
 class Metrics:
     def __init__(self, scheduler=None):
         self._sched = scheduler
-        self._lock = threading.Lock()
+        self._lock = TrackedLock("Metrics._lock")
         self.counters: dict[str, float] = defaultdict(float)
         self.series: dict[str, list[tuple[float, float]]] = defaultdict(list)
         self.events: list[tuple[float, str, dict]] = []
@@ -22,6 +34,11 @@ class Metrics:
     def inc(self, name: str, value: float = 1.0):
         with self._lock:
             self.counters[name] += value
+
+    def get(self, name: str, default: float = 0.0) -> float:
+        """Read one counter under the lock (no defaultdict insertion)."""
+        with self._lock:
+            return self.counters.get(name, default)
 
     def record(self, name: str, value: float):
         """Append a (t, value) sample to a time series."""

@@ -41,6 +41,7 @@ import time
 from collections import Counter
 from typing import Callable
 
+from repro.analysis.lockdep import TrackedLock
 from repro.core.autoscaler import AutoscalingService
 from repro.core.fleet import ConverterFleet
 from repro.core.metrics import Metrics
@@ -142,12 +143,13 @@ class ConversionPipeline:
         )
         self.converted: list[str] = []
         self._conversions: list[tuple[str, str]] = []  # (source, out key)
-        self._converted_lock = threading.Lock()
+        self._converted_lock = TrackedLock("ConversionPipeline._converted_lock")
         # wakes run_batch on every conversion or dead-letter (no busy-poll)
         self._batch_cond = threading.Condition(self._converted_lock)
         self._errors: dict[str, str] = {}  # source key -> last failure
         self.dead_lettered: list[tuple[dict, str]] = []  # (event, dlq_reason)
-        self._out_lock = threading.Lock()  # serializes out-key claims
+        # serializes out-key claims
+        self._out_lock = TrackedLock("ConversionPipeline._out_lock")
         self._out_claims: dict[str, str] = {}  # out key -> source key
         # permanent-failure visibility: a sink on the conversion DLQ records
         # the poisoned event + reason so run_batch can fail fast instead of
@@ -411,4 +413,4 @@ class ConversionPipeline:
         return self.metrics.timeseries("svc.wsi2dcm.instances")
 
     def done_count(self) -> int:
-        return int(self.metrics.counters.get("svc.wsi2dcm.completed", 0))
+        return int(self.metrics.get("svc.wsi2dcm.completed"))

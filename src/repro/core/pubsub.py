@@ -40,10 +40,10 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import random
-import threading
 from collections import Counter, defaultdict, deque
 from typing import Callable
 
+from repro.analysis.lockdep import TrackedLock, check_callback
 from repro.core.metrics import Metrics
 
 __all__ = ["Message", "Topic", "Subscription", "DeliveryCtx",
@@ -265,8 +265,10 @@ class Subscription:
         self._ordered_backlog: dict[str, deque] = defaultdict(deque)
         # guards backlog/outstanding/acked; endpoints are always invoked
         # through the scheduler (never under this lock), so concurrent
-        # real-mode workers acking in parallel cannot corrupt the pump
-        self._lock = threading.RLock()
+        # real-mode workers acking in parallel cannot corrupt the pump —
+        # lockdep's check_callback in _push enforces exactly that
+        self._lock = TrackedLock(f"Subscription[{name}]._lock",
+                                 reentrant=True)
         topic.subscribe(self)
 
     def _settle(self, ctx: DeliveryCtx) -> bool:
@@ -341,6 +343,7 @@ class Subscription:
         self.scheduler.schedule(delay, self._push, ctx)
 
     def _push(self, ctx: DeliveryCtx):
+        check_callback(f"sub.{self.name}.endpoint")
         try:
             self.endpoint(ctx.msg, ctx)
         except Exception as e:  # endpoint crashed synchronously

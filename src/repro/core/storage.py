@@ -15,9 +15,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import threading
 from typing import Callable
 
+from repro.analysis.lockdep import TrackedLock
 from repro.core.metrics import Metrics
 from repro.core.pubsub import Topic
 
@@ -53,7 +53,7 @@ class Bucket:
         self.scheduler = scheduler
         self.metrics = metrics
         self._objects: dict[str, Object] = {}
-        self._lock = threading.Lock()
+        self._lock = TrackedLock(f"Bucket[{name}]._lock")
         # (topic, events, prefix, ordered)
         self._notify: list[tuple[Topic, str, str, bool]] = []
         self.lifecycle: list[LifecycleRule] = []

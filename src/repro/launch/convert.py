@@ -9,7 +9,8 @@ pushes N synthetic proprietary-format slides through it.
 """
 import argparse
 import sys
-import time
+
+from repro.core.clock import wall_time
 
 
 def main(argv=None) -> int:
@@ -31,13 +32,13 @@ def main(argv=None) -> int:
         hedge_after=args.hedge, scale_down_delay=2.0,
     )
     scanner = SyntheticScanner(seed=1)
-    t0 = time.time()
+    t0 = wall_time()
     for i in range(args.slides):
         pipe.ingest(f"slides/s{i:03d}.psv",
                     scanner.scan(args.size, args.size, 256),
                     {"slide_id": f"S{i:03d}"})
     sched.run(until=600.0)
-    dt = time.time() - t0
+    dt = wall_time() - t0
     ok = pipe.done_count() == args.slides
     print(f"{pipe.done_count()}/{args.slides} converted in {dt:.1f}s; "
           f"DICOM store: {pipe.dicom.list()}")

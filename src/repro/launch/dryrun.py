@@ -23,7 +23,8 @@ import argparse
 import gzip
 import json
 import sys
-import time
+
+from repro.core.clock import wall_time
 from pathlib import Path
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
@@ -95,7 +96,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     n_params = M.param_count(cfg)
     n_active = M.active_param_count(cfg)
 
-    t0 = time.time()
+    t0 = wall_time()
     with shd.set_mesh(mesh):
         if shape.kind == "train":
             tc = TrainConfig(microbatches=TRAIN_MICROBATCHES.get(arch, 1))
@@ -142,9 +143,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = wall_time() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = wall_time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
     try:
@@ -267,7 +268,7 @@ def main() -> int:
                    "--one", arch, shape, mesh]
             if args.no_hlo:
                 cmd.append("--no-hlo")
-            t0 = time.time()
+            t0 = wall_time()
             try:
                 r = subprocess.run(cmd, timeout=args.timeout,
                                    capture_output=True, text=True)
@@ -278,7 +279,7 @@ def main() -> int:
                     }, indent=2))
                 if r.returncode != 0:
                     failures.append((arch, shape, mesh))
-                    print(f"[FAIL {time.time()-t0:6.0f}s] {arch} {shape} {mesh}")
+                    print(f"[FAIL {wall_time()-t0:6.0f}s] {arch} {shape} {mesh}")
                     print((r.stderr or "")[-1500:])
                 else:
                     print(r.stdout.strip())

@@ -8,7 +8,8 @@ a synthetic request stream and reports throughput + batching efficiency.
 """
 import argparse
 import sys
-import time
+
+from repro.core.clock import wall_time
 
 
 def main(argv=None) -> int:
@@ -43,7 +44,7 @@ def main(argv=None) -> int:
     PubSubFrontend(engine, req, resp)
 
     rng = np.random.default_rng(0)
-    t0 = time.time()
+    t0 = wall_time()
     for i in range(args.requests):
         req.publish({"request_id": i,
                      "prompt": rng.integers(0, cfg.vocab_size,
@@ -52,7 +53,7 @@ def main(argv=None) -> int:
     sched.run(until=0.0)
     engine.run_until_drained()
     sched.run()
-    dt = time.time() - t0
+    dt = wall_time() - t0
     toks = sum(len(r["tokens"]) for r in out)
     print(f"{len(out)}/{args.requests} responses, {toks} tokens, "
           f"{toks/dt:.1f} tok/s, {toks/max(engine.steps,1):.2f} tokens/tick")

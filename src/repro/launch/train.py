@@ -11,7 +11,8 @@ queue, async checkpoints, restore-on-start.
 """
 import argparse
 import sys
-import time
+
+from repro.core.clock import wall_time
 from pathlib import Path
 
 
@@ -73,7 +74,7 @@ def main(argv=None) -> int:
             print(f"resumed from step {start}")
 
         ds = TokenDataset(cfg.vocab_size, args.seq, seed=0)
-        t0 = time.time()
+        t0 = wall_time()
         m = {}
         for i in range(start, args.steps):
             batch = {k: jnp.asarray(v)
@@ -84,7 +85,7 @@ def main(argv=None) -> int:
             state, m = step_fn(state, batch)
             if (i + 1) % 10 == 0:
                 print(f"step {i+1:5d} loss {float(m['loss']):.4f} "
-                      f"({(time.time()-t0)/(i-start+1):.2f}s/step)")
+                      f"({(wall_time()-t0)/(i-start+1):.2f}s/step)")
             if ck and (i + 1) % args.ckpt_every == 0:
                 ck.save(i + 1, state)
         if ck:

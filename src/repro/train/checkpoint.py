@@ -23,11 +23,12 @@ import json
 import os
 import shutil
 import threading
-import time
 from pathlib import Path
 
 import jax
 import numpy as np
+
+from repro.core.clock import wall_time
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "AsyncCheckpointer"]
@@ -61,7 +62,7 @@ def save_checkpoint(ckpt_dir: str | Path, step: int, state, keep: int = 3):
     np.savez(tmp / "arrays.npz", **flat)
     meta = {
         "step": step,
-        "time": time.time(),
+        "time": wall_time(),
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                    for k, v in flat.items()},
     }

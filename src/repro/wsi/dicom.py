@@ -215,6 +215,13 @@ class Part10Index:
     ``read_part10``; additionally a basic offset table whose length is not a
     multiple of 4, or whose entries disagree with the actual fragment
     positions, is rejected.
+
+    Thread-safety (PR 8 lockdep audit): the index is **immutable after
+    construction** — ``__init__`` does the whole scan and readers only
+    slice ``self.data`` — so one instance is safely shared across threads
+    with no lock of its own. The mutable state around it (the store's LRU
+    of these, ``DicomStoreService._frame_cache``) is what gets the
+    ``TrackedLock``.
     """
 
     def __init__(self, data: bytes):

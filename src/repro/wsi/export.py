@@ -41,9 +41,9 @@ reason, so after the retry budget it becomes the dead-letter's
 """
 from __future__ import annotations
 
-import threading
 from contextlib import nullcontext
 
+from repro.analysis.lockdep import TrackedLock
 from repro.core.pubsub import DeliveryCtx, Message, Subscription, Topic
 from repro.core.storage import Bucket
 from repro.kernels import ops as kernel_ops
@@ -77,7 +77,7 @@ class ExportService:
         self.derived = derived
         self.mesh = mesh
         self.metrics = store.metrics
-        self._lock = threading.Lock()
+        self._lock = TrackedLock("ExportService._lock")
         self.exported: list[tuple[str, tuple[str, ...]]] = []
         self.subscription = None
         if request_topic is not None:

@@ -44,9 +44,10 @@ slides' levels in parallel worker threads.
 from __future__ import annotations
 
 import struct
-import threading
 
 import numpy as np
+
+from repro.analysis.lockdep import TrackedLock
 
 from repro.kernels import (dct8x8_quant, jpeg_inverse, jpeg_transform,
                            rgb2ycbcr)
@@ -357,7 +358,7 @@ def _comp_symbols(zz: np.ndarray, comp: int, nb_tile: int):
 
 
 _ZZ_IDX_CACHE: dict[tuple[int, int], np.ndarray] = {}
-_ZZ_IDX_LOCK = threading.Lock()
+_ZZ_IDX_LOCK = TrackedLock("jpeg._ZZ_IDX_LOCK")
 
 
 def _zigzag_gather_index(H: int, W: int) -> np.ndarray:

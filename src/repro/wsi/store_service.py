@@ -29,9 +29,9 @@ from __future__ import annotations
 
 import hashlib
 import json
-import threading
 from collections import OrderedDict
 
+from repro.analysis.lockdep import TrackedLock
 from repro.core.pubsub import Topic
 from repro.core.storage import Bucket
 from repro.wsi.convert import study_levels
@@ -57,7 +57,7 @@ class DicomStoreService:
         # downstream subscribers attach once, not once per shard
         self.topic = topic if topic is not None else \
             Topic("dicom-instance-stored", scheduler, self.metrics)
-        self._lock = threading.RLock()
+        self._lock = TrackedLock("DicomStoreService._lock", reentrant=True)
         self._index: dict[str, dict] = {}  # sop_uid -> metadata
         self._studies: dict[str, list[str]] = {}  # study_uid -> [sop_uid]
         self._frame_cache: OrderedDict[str, tuple[str, Part10Index]] = \

@@ -21,10 +21,9 @@ claim made concrete — both hang off ``DicomStoreService.topic``
 """
 from __future__ import annotations
 
-import threading
-
 import numpy as np
 
+from repro.analysis.lockdep import TrackedLock
 from repro.core.pubsub import DeliveryCtx, Message, Subscription
 from repro.core.storage import Bucket
 from repro.wsi.dicom import Part10Index
@@ -42,7 +41,7 @@ class ValidationService:
         self.store = store
         self.quarantine_bucket = quarantine_bucket
         self.metrics = store.metrics
-        self._lock = threading.Lock()
+        self._lock = TrackedLock("ValidationService._lock")
         self.checked: list[str] = []
         self.quarantined: list[tuple[str, str]] = []  # (sop_uid, reason)
         self.subscription = Subscription(store.topic, name, self._handle)
@@ -104,7 +103,7 @@ class InferenceSubscriber:
         self.store = store
         self.metrics = store.metrics
         self.max_frames = max_frames
-        self._lock = threading.Lock()
+        self._lock = TrackedLock("InferenceSubscriber._lock")
         self.predictions: dict[str, dict] = {}  # sop_uid -> result
         self.subscription = Subscription(store.topic, name, self._handle)
 

@@ -2,9 +2,36 @@ import os
 import sys
 from pathlib import Path
 
+import pytest
+
 # single-device CPU for tests (the dry-run manages its own device count)
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
+
+from repro.analysis import lockdep  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _lockdep_armed(request):
+    """Arm the lockdep detector for every test; fail on any violation.
+
+    Every TrackedLock acquisition in the tree is observed while a test
+    runs: lock-order inversions, callbacks invoked under a tracked lock,
+    holds longer than ``max_hold`` and acquisitions inside a jit trace all
+    fail the test that provoked them. Self-tests that *plant* violations
+    run them inside ``lockdep.capture()``, which shadows this detector, so
+    planted violations never leak here.
+    """
+    det = lockdep.arm(max_hold=30.0)
+    try:
+        yield det
+    finally:
+        violations = lockdep.disarm()
+        if violations:
+            lines = "\n".join(f"  [{v.kind}] {v.message}" for v in violations)
+            pytest.fail(
+                f"lockdep: {len(violations)} violation(s) during test:\n"
+                f"{lines}", pytrace=False)

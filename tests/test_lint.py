@@ -1,0 +1,199 @@
+"""Lint self-tests: every rule fires on a planted violation, the pragma
+suppresses it, the path exemptions hold, and the shipped tree is clean."""
+import textwrap
+from pathlib import Path
+
+from repro.analysis import lint
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _findings(tmp_path: Path, source: str, *, rel: str = "mod.py"):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return lint.lint_file(p, root=tmp_path)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ------------------------------------------------ each rule fires (seeded)
+def test_bare_lock_fires(tmp_path):
+    fs = _findings(tmp_path, """\
+        import threading
+        LOCK = threading.Lock()
+        RLOCK = threading.RLock()
+    """)
+    assert _rules(fs) == ["bare-lock", "bare-lock"]
+    assert "TrackedLock" in fs[0].message
+
+
+def test_wall_clock_fires(tmp_path):
+    fs = _findings(tmp_path, """\
+        import time
+        t0 = time.time()
+        time.sleep(1.0)
+    """)
+    assert _rules(fs) == ["wall-clock", "wall-clock"]
+    assert "wall_time" in fs[0].message and "wall_sleep" in fs[1].message
+
+
+def test_unseeded_random_fires(tmp_path):
+    fs = _findings(tmp_path, """\
+        import random
+        import numpy as np
+        r = random.Random()
+        x = random.random()
+        rng = np.random.default_rng()
+        y = np.random.uniform(0, 1)
+    """)
+    assert _rules(fs) == ["unseeded-random"] * 4
+
+
+def test_direct_pallas_fires(tmp_path):
+    fs = _findings(tmp_path, """\
+        from jax.experimental.pallas import pallas_call
+        import jax.experimental.pallas as pl
+        out = pallas_call(kernel, out_shape=shape)(x)
+        out2 = pl.pallas_call(kernel, out_shape=shape)(x)
+    """)
+    assert "direct-pallas" in _rules(fs)
+    # the import, the bare name, and the attribute access all flagged
+    assert _rules(fs).count("direct-pallas") >= 3
+
+
+def test_counter_name_fires(tmp_path):
+    fs = _findings(tmp_path, """\
+        metrics.inc("flat")
+        metrics.inc("Bad.Case")
+        metrics.record("spaced name.x", 1.0)
+        metrics.inc(f"svc.{name}.requests")    # placeholder segment: fine
+        metrics.inc("svc.conv.cold_starts")    # compliant: fine
+    """)
+    assert _rules(fs) == ["counter-name"] * 3
+
+
+def test_jit_global_mutation_fires(tmp_path):
+    fs = _findings(tmp_path, """\
+        import jax
+        CACHE = {}
+        COUNT = 0
+
+        @jax.jit
+        def f(x):
+            global COUNT
+            CACHE[1] = x
+            CACHE.update({2: x})
+            return x
+    """)
+    assert _rules(fs) == ["jit-global-mutation"] * 3
+
+
+# ------------------------------------------------------ pragma suppression
+def test_pragma_same_line_suppresses(tmp_path):
+    fs = _findings(tmp_path, """\
+        import threading
+        LOCK = threading.Lock()  # detector guts  # lint: allow(bare-lock)
+    """)
+    assert fs == []
+
+
+def test_pragma_line_above_suppresses(tmp_path):
+    fs = _findings(tmp_path, """\
+        import time
+        # CLI stopwatch, never under SimScheduler  # lint: allow(wall-clock)
+        t0 = time.time()
+    """)
+    assert fs == []
+
+
+def test_pragma_is_rule_specific(tmp_path):
+    fs = _findings(tmp_path, """\
+        import time
+        t0 = time.time()  # lint: allow(bare-lock)
+    """)
+    assert _rules(fs) == ["wall-clock"]
+
+
+def test_pragma_multiple_rules(tmp_path):
+    fs = _findings(tmp_path, """\
+        import time
+        t0 = time.time()  # lint: allow(bare-lock, wall-clock)
+    """)
+    assert fs == []
+
+
+# -------------------------------------------------------- path exemptions
+def test_analysis_dir_may_use_bare_locks(tmp_path):
+    fs = _findings(tmp_path, """\
+        import threading
+        MU = threading.Lock()
+    """, rel="analysis/guts.py")
+    assert fs == []
+
+
+def test_clock_module_may_use_wall_clock(tmp_path):
+    fs = _findings(tmp_path, """\
+        import time
+        def wall_time():
+            return time.time()
+    """, rel="core/clock.py")
+    assert fs == []
+
+
+def test_kernels_dir_may_use_pallas_call(tmp_path):
+    fs = _findings(tmp_path, """\
+        from jax.experimental.pallas import pallas_call
+        out = pallas_call(kernel, out_shape=shape)(x)
+    """, rel="kernels/impl.py")
+    assert fs == []
+
+
+# --------------------------------------------------- sanctioned idioms
+def test_sanctioned_idioms_are_clean(tmp_path):
+    fs = _findings(tmp_path, """\
+        import random
+        import time
+        import numpy as np
+        from repro.analysis.lockdep import TrackedLock
+        from repro.core.clock import wall_time
+
+        LOCK = TrackedLock("mod.LOCK")
+        r = random.Random(7)
+        rng = np.random.default_rng(7)
+        t0 = time.monotonic()
+        t1 = time.perf_counter()
+        t2 = wall_time()
+        metrics.inc("svc.conv.requests")
+    """)
+    assert fs == []
+
+
+def test_syntax_error_reported_not_raised(tmp_path):
+    fs = _findings(tmp_path, "def broken(:\n")
+    assert _rules(fs) == ["syntax"]
+
+
+# ------------------------------------------------------ shipped tree + CLI
+def test_shipped_tree_is_clean():
+    findings = lint.lint_paths(
+        [REPO / "src", REPO / "tests", REPO / "benchmarks"], root=REPO)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\nt = time.time()\n")
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert lint.main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "[wall-clock]" in out and "1 finding(s)" in out
+    assert lint.main([str(good)]) == 0
+    assert "clean" in capsys.readouterr().out
+    assert lint.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in lint.RULES:
+        assert rule in out

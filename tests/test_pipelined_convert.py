@@ -6,6 +6,7 @@ import time
 import pytest
 
 from repro.core import ConversionPipeline, RealScheduler
+from repro.core.clock import wall_sleep
 from repro.wsi import (ConvertOptions, SyntheticScanner,
                        convert_wsi_to_dicom, read_part10, study_levels)
 from repro.wsi.dicom import new_uid
@@ -148,7 +149,7 @@ def test_concurrent_real_mode_batch_matches_sequential():
     # the completion metric ticks in _finish after the handler returns
     deadline = time.monotonic() + 30.0
     while pipe.done_count() < n and time.monotonic() < deadline:
-        time.sleep(0.01)
+        wall_sleep(0.01)
     assert pipe.done_count() == n
     assert sorted(pipe.converted) == sorted(
         k.rsplit(".", 1)[0] + ".dcm" for k in slides)

@@ -8,6 +8,7 @@ import pytest
 
 from repro.core import ConversionPipeline, RealScheduler, SimScheduler
 from repro.core.pipeline import derive_out_key
+from repro.core.clock import wall_sleep
 from repro.wsi import (ConvertOptions, PSVReader, SyntheticScanner,
                        convert_wsi_to_dicom, read_part10, study_levels)
 
@@ -95,7 +96,7 @@ def test_colliding_sources_get_distinct_out_keys_and_reach_the_store():
             done = dict(pipe._conversions)
         if len(done) == 3:
             break
-        time.sleep(0.01)
+        wall_sleep(0.01)
     outs = {k: pipe.dicom.get(v).data for k, v in done.items()}
 
     keys = pipe.dicom.list()
@@ -110,14 +111,14 @@ def test_colliding_sources_get_distinct_out_keys_and_reach_the_store():
     deadline = time.monotonic() + 60.0
     while len(pipe.store_service.search_studies()) < 3 \
             and time.monotonic() < deadline:
-        time.sleep(0.01)
+        wall_sleep(0.01)
     studies = pipe.store_service.search_studies()
     assert len(studies) == 3
     deadline = time.monotonic() + 60.0
     while (len(pipe.validator.checked) < 3
            or len(pipe.ml_subscriber.predictions) < 3) \
             and time.monotonic() < deadline:
-        time.sleep(0.01)
+        wall_sleep(0.01)
     assert len(pipe.validator.checked) == 3
     assert pipe.validator.quarantined == []
     assert len(pipe.ml_subscriber.predictions) == 3
