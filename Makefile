@@ -1,22 +1,34 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test lint verify smoke bench
+.PHONY: test lint verify smoke bench race
 
-# tier-1 verify (conftest arms lockdep for the whole suite: any lock-order
-# inversion / callback-under-lock / held-too-long / acquired-in-jit
-# violation fails the test that provoked it)
+# tier-1 verify (conftest arms lockdep AND racedep for the whole suite:
+# any lock-order inversion / callback-under-lock / held-too-long /
+# acquired-in-jit violation — or a data race on tracked shared state —
+# fails the test that provoked it)
 test:
 	python -m pytest -x -q
 
 # project AST lint rules (see src/repro/analysis/lint.py: bare-lock,
-# wall-clock, unseeded-random, direct-pallas, counter-name,
+# bare-thread, wall-clock, unseeded-random, direct-pallas, counter-name,
 # jit-global-mutation); exits nonzero on any finding
 lint:
 	python -m repro.analysis.lint src tests benchmarks
 
 # same entry point, named the way the docs and CI refer to it
 verify: lint test
+
+# systematic schedule exploration (see src/repro/analysis/schedules.py):
+# runs the sim fleet scenario and the real-bytes fleet scenario — synthetic
+# slides through the real converter under drop/duplicate/delay faults and
+# an instance kill — across N seeded event schedules plus legacy FIFO,
+# asserting exactly-once settlement, cross-schedule byte-identical study
+# tars, and zero data races (racedep armed). A failing schedule dumps its
+# seed + trace under artifacts/ and prints a one-line replay command
+race:
+	python -m repro.analysis.schedules --explore sim --seeds 30
+	python -m repro.analysis.schedules --explore realbytes --seeds 20
 
 # CPU byte-identity smoke: the conversion benchmark with --fast asserts
 # per-tile ≡ batched ≡ pipelined ≡ concurrent output bytes on small slides

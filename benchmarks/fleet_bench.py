@@ -42,7 +42,7 @@ import time
 
 from benchmarks import fig2_workflows as fig2
 from benchmarks import fig3_autoscaling as fig3
-from repro.analysis import lockdep
+from repro.analysis import lockdep, racedep
 from repro.core import ConversionPipeline, DeliveryFaults, SimScheduler
 
 TAU = 90.0          # paper: ~90 s per gigapixel conversion on a 16-vCPU VM
@@ -321,6 +321,73 @@ def _lockdep_overhead_section(fast: bool) -> dict:
             "armed_ratio": round(armed_ratio, 4)}
 
 
+# --------------------------------------------------------- racedep overhead
+def _racedep_overhead_section(fast: bool) -> dict:
+    """Disarmed racedep instrumentation (Shared proxies on the spine's
+    tracked structures, no detector armed) must cost <10% over an
+    uninstrumented pipeline. Same paired-median methodology as the lockdep
+    gate: bare (instrumentation kill-switch, raw containers), disarmed
+    (proxies, one global read per access), armed (full vector-clock
+    checking — diagnostic only)."""
+    import gc
+
+    n, repeats = (120, 15) if fast else (200, 15)
+    _lockdep_workload(n)  # warm-up: imports, bytecode, allocator
+
+    def bare_run():
+        # uninstrumented baseline: objects constructed with instrumentation
+        # off carry raw dicts/deques/lists — zero proxy indirection
+        prev = racedep.set_instrumentation(False)
+        try:
+            _lockdep_workload(n)
+        finally:
+            racedep.set_instrumentation(prev)
+
+    def disarmed_run():
+        _lockdep_workload(n)
+
+    def armed_run():
+        with racedep.capture() as det:
+            _lockdep_workload(n)
+        assert det.violations == [], det.report()
+
+    assert racedep.current() is None, \
+        "overhead baseline needs the disarmed fast path"
+    times = {"bare": [], "disarmed": [], "armed": []}
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(repeats):
+            for label, run in (("bare", bare_run),
+                               ("disarmed", disarmed_run),
+                               ("armed", armed_run)):
+                gc.collect()
+                t0 = time.perf_counter()
+                run()
+                times[label].append(time.perf_counter() - t0)
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+
+    def median(xs):
+        xs = sorted(xs)
+        return xs[len(xs) // 2]
+
+    bare = min(times["bare"])
+    disarmed = min(times["disarmed"])
+    armed = min(times["armed"])
+    ratio = median(d / b for d, b in zip(times["disarmed"], times["bare"]))
+    armed_ratio = median(a / b for a, b in zip(times["armed"],
+                                               times["bare"]))
+    assert ratio < 1.10, \
+        f"disarmed racedep overhead {ratio:.3f}x exceeds the 10% gate " \
+        f"(bare {bare:.4f}s, disarmed {disarmed:.4f}s)"
+    return {"n_slides": n, "repeats": repeats, "bare_s": round(bare, 4),
+            "disarmed_s": round(disarmed, 4), "armed_s": round(armed, 4),
+            "overhead_ratio": round(ratio, 4), "gate": 1.10,
+            "armed_ratio": round(armed_ratio, 4)}
+
+
 # ------------------------------------------------------------- backpressure
 def _backpressure_section() -> dict:
     sched = SimScheduler()
@@ -360,6 +427,7 @@ def main(argv: list[str] | None = None) -> None:
         "fig3": _fig3_section(),
         "sharded_store": _hash_balance(),
         "lockdep_overhead": _lockdep_overhead_section(fast=args.fast),
+        "racedep_overhead": _racedep_overhead_section(fast=args.fast),
         "fault_injection": _fault_gauntlet(
             n_slides=3 if args.fast else 6, hw=256),
         "backpressure": _backpressure_section(),
@@ -386,6 +454,9 @@ def main(argv: list[str] | None = None) -> None:
     lo = result["lockdep_overhead"]
     print(f"lockdep_overhead,ok,{lo['overhead_ratio']}x disarmed vs bare "
           f"(gate {lo['gate']}x; armed diagnostic {lo['armed_ratio']}x)")
+    ro = result["racedep_overhead"]
+    print(f"racedep_overhead,ok,{ro['overhead_ratio']}x disarmed vs bare "
+          f"(gate {ro['gate']}x; armed diagnostic {ro['armed_ratio']}x)")
     print("wrote BENCH_fleet.json")
 
 

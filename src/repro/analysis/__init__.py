@@ -1,6 +1,7 @@
 """Machine-checked concurrency + determinism invariants.
 
-Two legs (DESIGN.md, "Static analysis & lockdep"):
+Four legs (DESIGN.md, "Static analysis & lockdep" and "Race detection &
+schedule exploration"):
 
 * :mod:`repro.analysis.lockdep` — runtime lock-order instrumentation.
   Every lock in the event-driven spine is a :class:`~repro.analysis
@@ -9,14 +10,42 @@ Two legs (DESIGN.md, "Static analysis & lockdep"):
   invoked under a lock, held-too-long anomalies, and locks acquired
   inside a jax trace. The tier-1 test suite runs fully armed
   (``tests/conftest.py``).
+* :mod:`repro.analysis.racedep` — hybrid lockset + vector-clock data-race
+  detector over the spine's shared structures (``Shared`` proxies planted
+  by ``@tracked_state``). Happens-before edges come from TrackedLock
+  acquire/release, condition wait/notify, scheduler pool submit/join, and
+  thread spawn/join; a race is an unordered access pair with disjoint
+  locksets. The tier-1 suite also runs with racedep armed.
+* :mod:`repro.analysis.schedules` — systematic schedule exploration:
+  seeded tie-breaking over equal-timestamp SimScheduler events, trace
+  record/replay, and an ``explore()`` harness asserting exactly-once
+  settlement, cross-schedule byte-identical output, and zero races
+  (``make race`` / the CI ``race`` job). Failures dump a replayable
+  seed+trace artifact.
 * :mod:`repro.analysis.lint` — AST lint pass with project-specific rules
   (``make lint`` / the CI ``lint`` job): no bare ``threading.Lock``, no
-  wall-clock reads outside ``core/clock.py``, no unseeded randomness, no
+  bare ``threading.Thread`` (use ``racedep.spawn``), no wall-clock or
+  monotonic reads outside ``core/clock.py``, no unseeded randomness, no
   ``pallas_call`` outside ``kernels/``, dotted counter names, no
   module-state mutation inside jit-traced functions.
 """
 from repro.analysis.lockdep import (LockDep, TrackedLock, Violation, arm,
                                     capture, check_callback, current, disarm)
+from repro.analysis.racedep import (RaceDep, RaceViolation, Shared, spawn,
+                                    tracked_state)
 
 __all__ = ["LockDep", "TrackedLock", "Violation", "arm", "disarm",
-           "capture", "check_callback", "current"]
+           "capture", "check_callback", "current",
+           "RaceDep", "RaceViolation", "Shared", "spawn", "tracked_state",
+           "ExplorationFailure", "explore", "replay"]
+
+_SCHEDULES_EXPORTS = ("ExplorationFailure", "explore", "replay")
+
+
+def __getattr__(name):
+    # lazy: schedules is also a `python -m` entry point, and importing it
+    # here eagerly would trip runpy's already-in-sys.modules warning
+    if name in _SCHEDULES_EXPORTS:
+        from repro.analysis import schedules
+        return getattr(schedules, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

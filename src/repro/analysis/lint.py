@@ -9,10 +9,17 @@ rule id              invariant
 bare-lock            no ``threading.Lock()``/``RLock()`` outside
                      ``analysis/`` — every lock must be a
                      ``TrackedLock`` so lockdep sees it
-wall-clock           no ``time.time()``/``time.sleep()`` outside
-                     ``core/clock.py`` — wall-clock reads break
-                     SimScheduler determinism; use the scheduler's
-                     ``now()`` or ``core.clock.wall_time``/``wall_sleep``
+wall-clock           no ``time.time()``/``time.sleep()``/
+                     ``time.monotonic()``/``time.perf_counter()`` outside
+                     ``core/clock.py`` and ``benchmarks/`` — wall-clock
+                     reads break SimScheduler determinism; use the
+                     scheduler's ``now()`` or ``core.clock.wall_time``/
+                     ``wall_sleep``/``monotonic``
+bare-thread          no ``threading.Thread(...)``/``threading.Timer(...)``
+                     outside ``analysis/`` and ``core/clock.py`` — spawns
+                     go through ``repro.analysis.racedep.spawn`` so
+                     racedep/lockdep see thread identity and the
+                     fork/join happens-before edges
 unseeded-random      no ``random``/``np.random`` use without an explicit
                      seed (module-global RNG state is run-order
                      dependent): ``random.Random(seed)``,
@@ -47,7 +54,10 @@ __all__ = ["lint_file", "lint_paths", "Finding", "RULES"]
 
 RULES = {
     "bare-lock": "threading.Lock/RLock outside analysis/ (use TrackedLock)",
-    "wall-clock": "time.time()/time.sleep() outside core/clock.py",
+    "bare-thread": "threading.Thread/Timer outside analysis/ and "
+                   "core/clock.py (use racedep.spawn)",
+    "wall-clock": "time.time()/sleep()/monotonic()/perf_counter() outside "
+                  "core/clock.py and benchmarks/",
     "unseeded-random": "random/np.random use without an explicit seed",
     "direct-pallas": "pallas_call referenced outside kernels/",
     "counter-name": "metrics counter not in dotted segment.segment form",
@@ -172,15 +182,29 @@ class _Linter(ast.NodeVisitor):
                     f"{'(reentrant=True)' if tail == 'RLock' else ''} so "
                     "lockdep can see it")
 
-        # wall-clock ------------------------------------------------------
-        if name in ("time.time", "time.sleep") \
+        # bare-thread -----------------------------------------------------
+        if name in ("threading.Thread", "threading.Timer") \
+                and not self._in("/analysis/") \
                 and not self.rel.endswith("core/clock.py"):
+            self._report(
+                node, "bare-thread",
+                f"{name}() — spawn through repro.analysis.racedep.spawn "
+                "(or schedule on a RealScheduler) so racedep/lockdep see "
+                "thread identity and fork/join ordering")
+
+        # wall-clock ------------------------------------------------------
+        if name in ("time.time", "time.sleep", "time.monotonic",
+                    "time.perf_counter") \
+                and not self.rel.endswith("core/clock.py") \
+                and not self._in("/benchmarks/"):
+            sanctioned = {"time": "wall_time", "sleep": "wall_sleep",
+                          "monotonic": "monotonic",
+                          "perf_counter": "monotonic"}[tail]
             self._report(
                 node, "wall-clock",
                 f"{name}() breaks SimScheduler determinism — use the "
-                "scheduler's now()/schedule(), or core.clock."
-                f"{'wall_time' if tail == 'time' else 'wall_sleep'}() "
-                "for sanctioned wall-clock use")
+                f"scheduler's now()/schedule(), or core.clock."
+                f"{sanctioned}() for sanctioned wall-clock use")
 
         # unseeded-random -------------------------------------------------
         self._check_random(node, name, tail)

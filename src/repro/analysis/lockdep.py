@@ -49,6 +49,11 @@ __all__ = ["TrackedLock", "LockDep", "Violation", "arm", "disarm",
 #: zero-cost default (see the overhead gate in benchmarks/fleet_bench.py).
 _DETECTOR: "LockDep | None" = None
 
+#: the armed race detector, or None — set by :mod:`repro.analysis.racedep`
+#: (arm/disarm/capture) so TrackedLock emits happens-before edges without
+#: this module importing racedep (imports flow racedep -> lockdep only)
+_RACE = None
+
 
 def _site(skip: int = 2) -> str:
     """Caller's source site, a few frames up, for violation reports."""
@@ -122,12 +127,18 @@ class TrackedLock:
             det = _DETECTOR
             if det is not None:
                 det._on_acquired(self)
+            r = _RACE
+            if r is not None:
+                r._on_lock_acquired(self)
         return got
 
     def release(self):
         det = _DETECTOR
         if det is not None:
             det._on_released(self)
+        r = _RACE
+        if r is not None:
+            r._on_lock_released(self)
         self._lock.release()
 
     def __enter__(self):
@@ -162,15 +173,17 @@ class TrackedLock:
     def _release_save(self):
         det = _DETECTOR
         count = det._on_wait_release(self) if det is not None else None
+        r = _RACE
+        rcount = r._on_wait_release(self) if r is not None else None
         if self._reentrant:
             inner = self._lock._release_save()
         else:
             self._lock.release()
             inner = None
-        return (inner, count)
+        return (inner, count, rcount)
 
     def _acquire_restore(self, state):
-        inner, count = state
+        inner, count, rcount = state
         if self._reentrant:
             self._lock._acquire_restore(inner)
         else:
@@ -178,6 +191,9 @@ class TrackedLock:
         det = _DETECTOR
         if det is not None:
             det._on_wait_acquire(self, count)
+        r = _RACE
+        if r is not None:
+            r._on_wait_acquire(self, rcount)
 
     def _is_owned(self) -> bool:
         if self._reentrant:
@@ -234,6 +250,8 @@ class LockDep:
                 "the compiled execution")
         for e in held:
             self._add_edge(e[0], lock)
+        # hold-time accounting wants real elapsed time even under
+        # SimScheduler  # lint: allow(wall-clock)
         held.append([lock, time.monotonic(), 1])
 
     def _on_released(self, lock: TrackedLock):
@@ -271,12 +289,12 @@ class LockDep:
                 return
         for e in held:
             self._add_edge(e[0], lock)
-        held.append([lock, time.monotonic(), count])
+        held.append([lock, time.monotonic(), count])  # lint: allow(wall-clock)
 
     def _check_hold_time(self, lock: TrackedLock, t0: float):
         if self.max_hold is None:
             return
-        dt = time.monotonic() - t0
+        dt = time.monotonic() - t0  # lint: allow(wall-clock)
         if dt > self.max_hold:
             self._violation(
                 "held-too-long",

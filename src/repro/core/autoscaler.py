@@ -65,6 +65,13 @@ class Instance:
         self.dead = False
 
 
+# deliberately NOT @tracked_state: queue/instances are service-private —
+# every access holds self._lock (receive/_drain/_finish/kill/ticks), so
+# tracked accesses could never pair into a race, and the controller scans
+# instances.values() thousands of times per run (the disarmed-overhead
+# gate in fleet_bench budgets proxying for structures that actually cross
+# a lock boundary: pubsub, metrics, pipeline and store maps, and the
+# fleet's admission surface)
 class AutoscalingService:
     #: Instance subclass to spawn — the fleet overrides this with an
     #: instance type that carries its own local work queue

@@ -15,14 +15,16 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import random
 import threading
 import time
 from typing import Callable
 
+from repro.analysis import racedep
 from repro.analysis.lockdep import TrackedLock
 
 __all__ = ["SimScheduler", "RealScheduler", "Handle", "wall_time",
-           "wall_sleep"]
+           "wall_sleep", "monotonic"]
 
 
 def wall_time() -> float:
@@ -45,6 +47,17 @@ def wall_sleep(seconds: float) -> None:
     time.sleep(seconds)
 
 
+def monotonic() -> float:
+    """The sanctioned monotonic read, for interval timing that genuinely
+    wants wall time (batch-window deadlines under ``RealScheduler``,
+    test timeouts). Spine code measuring virtual time must use its
+    scheduler's ``now()``; the ``wall-clock`` lint rule rejects raw
+    ``time.monotonic()``/``time.perf_counter()`` outside this module and
+    ``benchmarks/``.
+    """
+    return time.monotonic()
+
+
 class Handle:
     """Cancellation token for a scheduled callback."""
 
@@ -62,17 +75,35 @@ class Handle:
 
 
 class SimScheduler:
-    def __init__(self, start: float = 0.0):
+    """Deterministic discrete-event scheduler.
+
+    With ``seed=None`` (the default), equal-timestamp events fire in strict
+    FIFO submission order — bit-for-bit the historical behaviour. With an
+    integer ``seed``, each event draws a random tie-break key at schedule
+    time, so equal-timestamp events fire in a seeded *permutation* of
+    submission order: a legal-but-different schedule for the same program.
+    ``repro.analysis.schedules.explore`` re-runs a scenario across many
+    seeds to hunt order-dependent bugs; ``trace`` records what actually
+    fired (for the failure artifact), and re-running with the same seed
+    replays the identical schedule.
+    """
+
+    def __init__(self, start: float = 0.0, seed: int | None = None,
+                 record_trace: bool = False):
         self._now = start
         self._heap: list = []
         self._seq = itertools.count()
+        self.seed = seed
+        self._rng = None if seed is None else random.Random(seed)
+        self.trace: list | None = [] if record_trace else None
 
     def now(self) -> float:
         return self._now
 
     def schedule(self, delay: float, fn: Callable, *args) -> Handle:
         h = Handle()
-        heapq.heappush(self._heap, (self._now + max(delay, 0.0),
+        tie = self._rng.random() if self._rng is not None else 0.0
+        heapq.heappush(self._heap, (self._now + max(delay, 0.0), tie,
                                     next(self._seq), fn, args, h))
         return h
 
@@ -80,13 +111,18 @@ class SimScheduler:
         """Drain events (deterministically) until the heap empties, ``until``
         passes, or ``max_events`` fire. Returns the number of events fired."""
         fired = 0
+        trace = self.trace
         while self._heap and fired < max_events:
-            t, _, fn, args, h = self._heap[0]
+            t, _, seq, fn, args, h = self._heap[0]
             if until is not None and t > until:
                 break
             heapq.heappop(self._heap)
             self._now = max(self._now, t)
             if not h.cancelled:
+                if trace is not None:
+                    trace.append((seq, round(t, 9),
+                                  getattr(fn, "__qualname__",
+                                          getattr(fn, "__name__", repr(fn)))))
                 fn(*args)
                 fired += 1
         if until is not None:
@@ -124,8 +160,12 @@ class RealScheduler:
             if self._inflight == 0:
                 self._quiet.notify_all()
 
-    def _submit(self, fn, args, h: Handle):
+    def _submit(self, fn, args, h: Handle, tok=None):
         def wrapped():
+            # the pool thread inherits the submitter's happens-before
+            # frontier: everything the submitter did before schedule()
+            # is ordered before this event
+            racedep.join_point(tok)
             try:
                 if not h.cancelled:
                     fn(*args)
@@ -139,10 +179,11 @@ class RealScheduler:
 
     def schedule(self, delay: float, fn: Callable, *args) -> Handle:
         h = Handle()
+        tok = racedep.fork_point()
         with self._lock:
             self._inflight += 1
         if delay <= 0:
-            self._submit(fn, args, h)
+            self._submit(fn, args, h, tok)
         else:
             settled = [False]  # fire/cancel exclusion
 
@@ -152,7 +193,7 @@ class RealScheduler:
                         return
                     settled[0] = True
                     self._timers.discard(t)
-                self._submit(fn, args, h)
+                self._submit(fn, args, h, tok)
                 self._done()
 
             def on_cancel():

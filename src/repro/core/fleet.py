@@ -45,11 +45,20 @@ from collections import deque
 from typing import Callable
 
 from repro.analysis.lockdep import check_callback
+from repro.analysis.racedep import tracked_state
 from repro.core.autoscaler import AutoscalingService, Instance, _req_ids
 
 __all__ = ["ConverterFleet", "FleetInstance"]
 
 
+# deliberately NOT @tracked_state: the per-instance queue/running deques
+# are fleet-private — every access (receive/_drain/_finish/_kill) holds the
+# fleet's single _lock, so the detector could never pair them into a race,
+# and the dispatch loop polls len(queue) thousands of times per tick (the
+# disarmed-overhead gate in fleet_bench would blow its 10% budget on
+# structures with no unlocked second accessor). Cross-thread misuse of the
+# fleet still surfaces through its tracked coordination surface
+# (_pending/_admitted/_completed/instances on ConverterFleet below).
 class FleetInstance(Instance):
     __slots__ = ("queue", "running")
 
@@ -88,6 +97,7 @@ def _default_key_of(payload):
     return None
 
 
+@tracked_state("_pending", "_rr", "_tenant_load", "_admitted", "_completed")
 class ConverterFleet(AutoscalingService):
     instance_cls = FleetInstance
 
@@ -214,10 +224,10 @@ class ConverterFleet(AutoscalingService):
                        if not i.dead and i.state in ("idle", "busy")),
                       key=lambda i: i.iid)
 
-    def _pick_target(self) -> FleetInstance | None:
+    def _pick_target(self, ready=None) -> FleetInstance | None:
         # lock held: least-loaded ready instance with queue room
         best, best_load = None, None
-        for inst in self._ready_instances():
+        for inst in self._ready_instances() if ready is None else ready:
             load = inst.active + len(inst.queue)
             if load >= self.concurrency + self.instance_queue_depth:
                 continue
@@ -236,13 +246,16 @@ class ConverterFleet(AutoscalingService):
         return None
 
     def _drain(self):
-        # lock held. 1) promote local queues into free concurrency slots
-        for inst in self._ready_instances():
+        # lock held. Ready-set membership (alive + idle/busy) is stable for
+        # the whole drain — serving only flips active counts — so sort once
+        ready = self._ready_instances()
+        # 1) promote local queues into free concurrency slots
+        for inst in ready:
             while inst.queue and inst.active < self.concurrency:
                 self._serve(inst, inst.queue.popleft())
         # 2) fair-assign pending work to per-instance queues
         while True:
-            inst = self._pick_target()
+            inst = self._pick_target(ready)
             if inst is None:
                 break
             req = self._next_fair()
@@ -258,7 +271,6 @@ class ConverterFleet(AutoscalingService):
         # instance that finished early) relieves the loaded instances
         # instead of idling next to their head-of-line backlog
         while True:
-            ready = self._ready_instances()
             free = [i for i in ready
                     if i.active < self.concurrency and not i.queue]
             donors = [i for i in ready if i.queue]
@@ -304,7 +316,8 @@ class ConverterFleet(AutoscalingService):
     def _control_tick(self):
         with self._lock:
             self._tick_pending = False
-            demand = self._waiting() + sum(
+            waiting = self._waiting()
+            demand = waiting + sum(
                 i.active for i in self.instances.values() if not i.dead)
             alive = [i for i in self.instances.values()
                      if i.state != "stopped"]
@@ -313,7 +326,7 @@ class ConverterFleet(AutoscalingService):
                               math.ceil(demand / max(1, self.concurrency))))
             for _ in range(desired - len(alive)):
                 self._start_instance()
-            self.metrics.record(f"svc.{self.name}.backlog", self._waiting())
+            self.metrics.record(f"svc.{self.name}.backlog", waiting)
             self._drain()
             # keep ticking while there is anything to react to; a later
             # receive() re-kicks an idle controller (lets SimScheduler.run

@@ -16,10 +16,12 @@ from __future__ import annotations
 from collections import defaultdict
 
 from repro.analysis.lockdep import TrackedLock
+from repro.analysis.racedep import tracked_state
 
 __all__ = ["Metrics"]
 
 
+@tracked_state("counters", "series", "events")
 class Metrics:
     def __init__(self, scheduler=None):
         self._sched = scheduler

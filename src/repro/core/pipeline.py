@@ -37,11 +37,12 @@ from __future__ import annotations
 
 import hashlib
 import threading
-import time
 from collections import Counter
 from typing import Callable
 
 from repro.analysis.lockdep import TrackedLock
+from repro.analysis.racedep import tracked_state
+from repro.core import clock
 from repro.core.autoscaler import AutoscalingService
 from repro.core.fleet import ConverterFleet
 from repro.core.metrics import Metrics
@@ -63,6 +64,8 @@ def derive_out_key(key: str) -> str:
     return f"{head}/{stem}.dcm" if head else f"{stem}.dcm"
 
 
+@tracked_state("converted", "_conversions", "_errors", "dead_lettered",
+               "_out_claims", "export_dead_lettered")
 class ConversionPipeline:
     def __init__(
         self,
@@ -388,7 +391,7 @@ class ConversionPipeline:
         for key, data in slides.items():
             meta = (metadata or {}).get(key, {"slide_id": key})
             self.ingest(key, data, meta)
-        deadline = time.monotonic() + timeout
+        deadline = clock.monotonic() + timeout
         with self._batch_cond:
             while True:
                 done = dict(self._conversions[start:])
@@ -399,7 +402,7 @@ class ConversionPipeline:
                         raise RuntimeError(
                             f"slide {event['name']!r} dead-lettered: "
                             f"{reason}")
-                remaining = deadline - time.monotonic()
+                remaining = deadline - clock.monotonic()
                 if remaining <= 0:
                     raise TimeoutError(
                         f"batch conversion incomplete after {timeout}s "

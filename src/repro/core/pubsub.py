@@ -44,6 +44,7 @@ from collections import Counter, defaultdict, deque
 from typing import Callable
 
 from repro.analysis.lockdep import TrackedLock, check_callback
+from repro.analysis.racedep import tracked_state
 from repro.core.metrics import Metrics
 
 __all__ = ["Message", "Topic", "Subscription", "DeliveryCtx",
@@ -230,6 +231,8 @@ class DeliveryCtx:
                               consume_budget=consume_budget)
 
 
+@tracked_state("backlog", "outstanding", "acked", "_ordered_busy",
+               "_ordered_backlog")
 class Subscription:
     def __init__(
         self,

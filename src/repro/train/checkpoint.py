@@ -28,6 +28,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.analysis import racedep
 from repro.core.clock import wall_time
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
@@ -143,8 +144,9 @@ class AsyncCheckpointer:
             except Exception as e:  # pragma: no cover
                 self.error = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
-        self._thread.start()
+        # tracked spawn: racedep sees the fork here and the join in wait(),
+        # so host_state handoff and self.error are ordered, not racy
+        self._thread = racedep.spawn(work, name=f"ckpt-save-{step}")
 
     def wait(self):
         if self._thread is not None:

@@ -32,6 +32,7 @@ import json
 from collections import OrderedDict
 
 from repro.analysis.lockdep import TrackedLock
+from repro.analysis.racedep import tracked_state
 from repro.core.pubsub import Topic
 from repro.core.storage import Bucket
 from repro.wsi.convert import study_levels
@@ -40,6 +41,7 @@ from repro.wsi.dicom import Part10Index
 __all__ = ["DicomStoreService", "ShardedDicomStore"]
 
 
+@tracked_state("_index", "_studies", "_frame_cache")
 class DicomStoreService:
     #: bucket key of the persistent index checkpoint
     INDEX_KEY = "_meta/index.json"

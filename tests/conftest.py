@@ -11,7 +11,7 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-from repro.analysis import lockdep  # noqa: E402
+from repro.analysis import lockdep, racedep  # noqa: E402
 
 
 @pytest.fixture(autouse=True)
@@ -34,4 +34,27 @@ def _lockdep_armed(request):
             lines = "\n".join(f"  [{v.kind}] {v.message}" for v in violations)
             pytest.fail(
                 f"lockdep: {len(violations)} violation(s) during test:\n"
+                f"{lines}", pytrace=False)
+
+
+@pytest.fixture(autouse=True)
+def _racedep_armed(request):
+    """Arm the data-race detector for every test; fail on any report.
+
+    Every read/write of the spine's ``@tracked_state`` structures is
+    checked against the happens-before order (locks, condition waits,
+    scheduler fork/join, tracked spawns) while a test runs. Self-tests
+    that *plant* races scope them inside ``racedep.capture()``.
+    """
+    det = racedep.arm()
+    try:
+        yield det
+    finally:
+        violations = racedep.disarm()
+        if violations:
+            lines = "\n".join(f"  {v.message}\n    first:  {v.first_site}"
+                              f"\n    second: {v.second_site}"
+                              for v in violations)
+            pytest.fail(
+                f"racedep: {len(violations)} data race(s) during test:\n"
                 f"{lines}", pytrace=False)

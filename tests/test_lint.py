@@ -35,9 +35,22 @@ def test_wall_clock_fires(tmp_path):
         import time
         t0 = time.time()
         time.sleep(1.0)
+        t1 = time.monotonic()
+        t2 = time.perf_counter()
     """)
-    assert _rules(fs) == ["wall-clock", "wall-clock"]
+    assert _rules(fs) == ["wall-clock"] * 4
     assert "wall_time" in fs[0].message and "wall_sleep" in fs[1].message
+    assert "monotonic" in fs[2].message and "monotonic" in fs[3].message
+
+
+def test_bare_thread_fires(tmp_path):
+    fs = _findings(tmp_path, """\
+        import threading
+        t = threading.Thread(target=work, daemon=True)
+        timer = threading.Timer(5.0, fire)
+    """)
+    assert _rules(fs) == ["bare-thread", "bare-thread"]
+    assert "racedep.spawn" in fs[0].message
 
 
 def test_unseeded_random_fires(tmp_path):
@@ -137,9 +150,30 @@ def test_analysis_dir_may_use_bare_locks(tmp_path):
 def test_clock_module_may_use_wall_clock(tmp_path):
     fs = _findings(tmp_path, """\
         import time
+        import threading
         def wall_time():
             return time.time()
+        def monotonic():
+            return time.monotonic()
+        t = threading.Timer(1.0, fire)
     """, rel="core/clock.py")
+    assert fs == []
+
+
+def test_benchmarks_dir_may_use_monotonic(tmp_path):
+    fs = _findings(tmp_path, """\
+        import time
+        t0 = time.perf_counter()
+        t1 = time.monotonic()
+    """, rel="benchmarks/some_bench.py")
+    assert fs == []
+
+
+def test_analysis_dir_may_spawn_threads(tmp_path):
+    fs = _findings(tmp_path, """\
+        import threading
+        t = threading.Thread(target=work)
+    """, rel="analysis/racedep.py")
     assert fs == []
 
 
@@ -163,8 +197,6 @@ def test_sanctioned_idioms_are_clean(tmp_path):
         LOCK = TrackedLock("mod.LOCK")
         r = random.Random(7)
         rng = np.random.default_rng(7)
-        t0 = time.monotonic()
-        t1 = time.perf_counter()
         t2 = wall_time()
         metrics.inc("svc.conv.requests")
     """)

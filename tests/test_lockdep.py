@@ -11,7 +11,7 @@ import threading
 import pytest
 
 from _hypothesis_compat import given, settings, st
-from repro.analysis import lockdep
+from repro.analysis import lockdep, racedep
 from repro.analysis.lockdep import TrackedLock
 from repro.core import ConversionPipeline, SimScheduler
 
@@ -54,7 +54,8 @@ def test_inversion_detected_across_threads():
                 pass
 
     with lockdep.capture() as det:
-        threads = [threading.Thread(target=t1), threading.Thread(target=t2)]
+        threads = [racedep.spawn(t1, start=False),
+                   racedep.spawn(t2, start=False)]
         for t in threads:
             t.start()
         for t in threads:
@@ -126,7 +127,7 @@ def test_consistent_order_across_threads_is_clean():
                     pass
 
     with lockdep.capture() as det:
-        threads = [threading.Thread(target=worker) for _ in range(4)]
+        threads = [racedep.spawn(worker, start=False) for _ in range(4)]
         for t in threads:
             t.start()
         for t in threads:
@@ -149,7 +150,8 @@ def test_disjoint_orders_in_different_threads_are_clean():
             pass
 
     with lockdep.capture() as det:
-        threads = [threading.Thread(target=t1), threading.Thread(target=t2)]
+        threads = [racedep.spawn(t1, start=False),
+                   racedep.spawn(t2, start=False)]
         for t in threads:
             t.start()
         for t in threads:
@@ -196,7 +198,7 @@ def test_condition_wait_is_clean():
 
     with lockdep.capture(max_hold=0.5) as det:
         with cond:
-            t = threading.Thread(target=producer)
+            t = racedep.spawn(producer, start=False)
             t.start()
             while not ready:
                 cond.wait(timeout=5.0)

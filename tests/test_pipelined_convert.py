@@ -1,11 +1,11 @@
 """Pipelined conversion engine: byte-identity A/B vs the sync batched path,
 manifest-resume determinism, and real-mode multi-slide concurrency."""
 import json
-import time
 
 import pytest
 
 from repro.core import ConversionPipeline, RealScheduler
+from repro.core import clock
 from repro.core.clock import wall_sleep
 from repro.wsi import (ConvertOptions, SyntheticScanner,
                        convert_wsi_to_dicom, read_part10, study_levels)
@@ -147,8 +147,8 @@ def test_concurrent_real_mode_batch_matches_sequential():
     assert outs == reference
     # run_batch returns once the studies are stored (inside the handler);
     # the completion metric ticks in _finish after the handler returns
-    deadline = time.monotonic() + 30.0
-    while pipe.done_count() < n and time.monotonic() < deadline:
+    deadline = clock.monotonic() + 30.0
+    while pipe.done_count() < n and clock.monotonic() < deadline:
         wall_sleep(0.01)
     assert pipe.done_count() == n
     assert sorted(pipe.converted) == sorted(
