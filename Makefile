@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test lint verify smoke bench race
+.PHONY: test lint verify smoke bench race trace
 
 # tier-1 verify (conftest arms lockdep AND racedep for the whole suite:
 # any lock-order inversion / callback-under-lock / held-too-long /
@@ -29,6 +29,15 @@ verify: lint test
 race:
 	python -m repro.analysis.schedules --explore sim --seeds 30
 	python -m repro.analysis.schedules --explore realbytes --seeds 20
+
+# instrumented observability smoke (see src/repro/core/dashboard.py):
+# runs a small real-conversion batch on the wall-clock scheduler with the
+# distributed tracer armed, delivery faults injected, and an instance
+# killed mid-run; renders the single dashboard and writes
+# artifacts/dashboard.json + artifacts/trace-sample.json (one slide's
+# full span tree) — exits nonzero if any slide's trace is disconnected
+trace:
+	python -m repro.core.dashboard --smoke --out artifacts
 
 # CPU byte-identity smoke: the conversion benchmark with --fast asserts
 # per-tile ≡ batched ≡ pipelined ≡ concurrent output bytes on small slides

@@ -290,7 +290,7 @@ def _mixed_format(n_slides: int, slide: int,
     for sid in scanners:
         assert outs[f"psv/{sid}.psv"] == outs[f"tiff/{sid}.tiff"], \
             f"{sid}: TIFF study tar diverges from the PSV delivery"
-    fmt_counts = {f: int(pipe.metrics.counters[f"pipeline.format.{f}"])
+    fmt_counts = {f: int(pipe.metrics.get(f"pipeline.format.{f}"))
                   for f in MIXED_FORMATS}
     assert fmt_counts == {f: n_slides for f in MIXED_FORMATS}
     mpix = len(slides) * slide * slide / 1e6

@@ -139,7 +139,7 @@ def _export_section(slide_hw: int) -> dict:
     t_export = time.perf_counter() - t0
     clean = _snapshot(exporter.derived)
     frames_decoded = int(
-        svc.metrics.counters["pipeline.export.frames_decoded"])
+        svc.metrics.get("pipeline.export.frames_decoded"))
 
     # repeated export, full re-derivation forced: byte-identical TIFFs
     # (idempotent bucket no-ops) — proves determinism, not just the
@@ -152,7 +152,7 @@ def _export_section(slide_hw: int) -> dict:
 
     # default path: unchanged levels are skipped without fetch/decode
     exporter.export_study(study)
-    assert svc.metrics.counters["pipeline.export.levels_unchanged"] \
+    assert svc.metrics.get("pipeline.export.levels_unchanged") \
         == len(keys), "generation-skip did not engage on re-export"
     assert _snapshot(exporter.derived) == clean
 

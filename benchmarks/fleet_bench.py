@@ -43,7 +43,8 @@ import time
 from benchmarks import fig2_workflows as fig2
 from benchmarks import fig3_autoscaling as fig3
 from repro.analysis import lockdep, racedep
-from repro.core import ConversionPipeline, DeliveryFaults, SimScheduler
+from repro.core import (ConversionPipeline, DeliveryFaults, SimScheduler,
+                        dashboard, tracing)
 
 TAU = 90.0          # paper: ~90 s per gigapixel conversion on a 16-vCPU VM
 COLD = 12.0         # paper: Cloud Run cold start
@@ -168,15 +169,18 @@ def _fault_gauntlet(n_slides: int, hw: int) -> dict:
               .duplicate("s1", lag=1.0)           # double push → dedupe
               .delay("s2", by=200.0))             # arrives after deadline
     sched = SimScheduler()
-    pipe = ConversionPipeline(
-        sched, convert=convert, cold_start=COLD, max_instances=4,
-        ack_deadline=120.0, min_backoff=5.0,
-        fleet=dict(instance_queue_depth=2), ordered_ingest=True,
-        store_shards=4, delivery_faults=faults)
-    for k, d in slides.items():
-        pipe.ingest(k, d, meta[k])
-    sched.schedule(5.0, pipe.service.kill_instance)  # churn mid-backlog
-    sched.run()
+    # traced on the sim clock: every slide's journey (faults, kill, shards
+    # included) must land as one connected span tree
+    with tracing.capture(now=sched.now) as tracer:
+        pipe = ConversionPipeline(
+            sched, convert=convert, cold_start=COLD, max_instances=4,
+            ack_deadline=120.0, min_backoff=5.0,
+            fleet=dict(instance_queue_depth=2), ordered_ingest=True,
+            store_shards=4, delivery_faults=faults)
+        for k, d in slides.items():
+            pipe.ingest(k, d, meta[k])
+        sched.schedule(5.0, pipe.service.kill_instance)  # churn mid-backlog
+        sched.run()
 
     # --- zero lost, zero double-converted, nothing dead-lettered ---------
     assert pipe.dead_lettered == [], \
@@ -184,7 +188,7 @@ def _fault_gauntlet(n_slides: int, hw: int) -> dict:
     out_keys = pipe.dicom.list()
     assert len(out_keys) == n_slides, \
         f"{len(out_keys)} studies for {n_slides} slides"
-    writes = int(pipe.metrics.counters["bucket.dicom-store.writes"])
+    writes = int(pipe.metrics.get("bucket.dicom-store.writes"))
     assert writes == n_slides, \
         f"{writes} study-tar writes for {n_slides} slides (double convert?)"
 
@@ -197,7 +201,20 @@ def _fault_gauntlet(n_slides: int, hw: int) -> dict:
     # --- the faults and the kill actually fired -------------------------
     assert faults.injected["drop"] >= 1 and faults.injected["duplicate"] >= 1 \
         and faults.injected["delay"] >= 1, dict(faults.injected)
-    assert int(pipe.metrics.counters["svc.wsi2dcm.killed"]) == 1
+    assert int(pipe.metrics.get("svc.wsi2dcm.killed")) == 1
+
+    # --- one connected span tree per slide; attribution sums to the
+    # --- trace window (the dashboard's 5% acceptance gate) --------------
+    report = dashboard.build_report(pipe.metrics, tracer,
+                                    title="fault gauntlet")
+    assert len(report["traces"]) == n_slides, \
+        f"{len(report['traces'])} traces for {n_slides} slides"
+    for t in report["traces"]:
+        assert not t["problems"], \
+            f"trace {t['trace_id']} ({t['slide']}): {t['problems']}"
+        total = sum(t["attribution"].values())
+        assert abs(total - t["duration"]) <= 0.05 * max(t["duration"], 1e-9), \
+            f"attribution {total} vs duration {t['duration']} for {t['slide']}"
 
     # --- crash a populated shard; rebuild serves identical QIDO/WADO ----
     ss = pipe.store_service
@@ -230,10 +247,16 @@ def _fault_gauntlet(n_slides: int, hw: int) -> dict:
         "rebuilt_instances": rebuilt,
         "crash_rebuild_identical": True,
         "deliveries": int(
-            pipe.metrics.counters["sub.wsi2dcm-push.deliveries"]),
+            pipe.metrics.get("sub.wsi2dcm-push.deliveries")),
         "duplicates_deduped": int(
-            pipe.metrics.counters.get("svc.wsi2dcm.duplicates", 0)),
+            pipe.metrics.get("svc.wsi2dcm.duplicates")),
         "completion_s": sched.now(),
+        # the single dashboard, embedded: per-slide critical path + the
+        # delivery-latency histogram percentiles
+        "dashboard": {
+            "traces": report["traces"],
+            "histograms": report["histograms"],
+        },
     }
 
 
@@ -388,6 +411,82 @@ def _racedep_overhead_section(fast: bool) -> dict:
             "armed_ratio": round(armed_ratio, 4)}
 
 
+# --------------------------------------------------------- tracing overhead
+def _tracing_overhead_section(fast: bool) -> dict:
+    """Disarmed tracing (every instrumentation point bails on one
+    module-global read) must cost <10% over a spine with the trace points
+    compiled out. Same paired-median methodology as the lockdep/racedep
+    gates: bare (tracing entry points monkeypatched to no-ops — what the
+    spine would cost had it never been instrumented), disarmed (the
+    shipped fast path), armed (full span capture — diagnostic only)."""
+    import gc
+
+    n, repeats = (120, 15) if fast else (200, 15)
+    _lockdep_workload(n)  # warm-up: imports, bytecode, allocator
+
+    def bare_run():
+        t = tracing
+        orig = (t.start_span, t.end_span, t.add_event, t.inject,
+                t.extract, t.use_span, t.span, t.current_span)
+        t.start_span = lambda name, **kw: None
+        t.end_span = lambda sp, **kw: None
+        t.add_event = lambda sp, name, **kw: None
+        t.inject = lambda attributes, sp=None: None
+        t.extract = lambda attributes: None
+        t.use_span = lambda sp: t._NULL
+        t.span = lambda name, **kw: t._NULL
+        t.current_span = lambda: None
+        try:
+            _lockdep_workload(n)
+        finally:
+            (t.start_span, t.end_span, t.add_event, t.inject,
+             t.extract, t.use_span, t.span, t.current_span) = orig
+
+    def disarmed_run():
+        _lockdep_workload(n)
+
+    def armed_run():
+        with tracing.capture() as tracer:
+            _lockdep_workload(n)
+        assert tracer.spans, "armed run recorded no spans"
+
+    assert tracing.current() is None, \
+        "overhead baseline needs the disarmed fast path"
+    times = {"bare": [], "disarmed": [], "armed": []}
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(repeats):
+            for label, run in (("bare", bare_run),
+                               ("disarmed", disarmed_run),
+                               ("armed", armed_run)):
+                gc.collect()
+                t0 = time.perf_counter()
+                run()
+                times[label].append(time.perf_counter() - t0)
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+
+    def median(xs):
+        xs = sorted(xs)
+        return xs[len(xs) // 2]
+
+    bare = min(times["bare"])
+    disarmed = min(times["disarmed"])
+    armed = min(times["armed"])
+    ratio = median(d / b for d, b in zip(times["disarmed"], times["bare"]))
+    armed_ratio = median(a / b for a, b in zip(times["armed"],
+                                               times["bare"]))
+    assert ratio < 1.10, \
+        f"disarmed tracing overhead {ratio:.3f}x exceeds the 10% gate " \
+        f"(bare {bare:.4f}s, disarmed {disarmed:.4f}s)"
+    return {"n_slides": n, "repeats": repeats, "bare_s": round(bare, 4),
+            "disarmed_s": round(disarmed, 4), "armed_s": round(armed, 4),
+            "overhead_ratio": round(ratio, 4), "gate": 1.10,
+            "armed_ratio": round(armed_ratio, 4)}
+
+
 # ------------------------------------------------------------- backpressure
 def _backpressure_section() -> dict:
     sched = SimScheduler()
@@ -399,9 +498,8 @@ def _backpressure_section() -> dict:
     for i in range(n):
         pipe.ingest(f"burst/s{i:02d}.psv", bytes([i]) * 32)
     sched.run()
-    shed = int(pipe.metrics.counters.get("svc.wsi2dcm.shed", 0))
-    requeues = int(
-        pipe.metrics.counters.get("sub.wsi2dcm-push.requeues", 0))
+    shed = int(pipe.metrics.get("svc.wsi2dcm.shed"))
+    requeues = int(pipe.metrics.get("sub.wsi2dcm-push.requeues"))
     assert pipe.done_count() == n, \
         f"only {pipe.done_count()}/{n} completed under backpressure"
     assert shed > 0, "overload never shed"
@@ -428,6 +526,7 @@ def main(argv: list[str] | None = None) -> None:
         "sharded_store": _hash_balance(),
         "lockdep_overhead": _lockdep_overhead_section(fast=args.fast),
         "racedep_overhead": _racedep_overhead_section(fast=args.fast),
+        "tracing_overhead": _tracing_overhead_section(fast=args.fast),
         "fault_injection": _fault_gauntlet(
             n_slides=3 if args.fast else 6, hw=256),
         "backpressure": _backpressure_section(),
@@ -457,6 +556,14 @@ def main(argv: list[str] | None = None) -> None:
     ro = result["racedep_overhead"]
     print(f"racedep_overhead,ok,{ro['overhead_ratio']}x disarmed vs bare "
           f"(gate {ro['gate']}x; armed diagnostic {ro['armed_ratio']}x)")
+    to = result["tracing_overhead"]
+    print(f"tracing_overhead,ok,{to['overhead_ratio']}x disarmed vs bare "
+          f"(gate {to['gate']}x; armed diagnostic {to['armed_ratio']}x)")
+    for t in fi["dashboard"]["traces"]:
+        a = t["attribution"]
+        print(f"trace,{t['slide']},total={t['duration']:.1f}s,"
+              f"queue={a['queue']:.1f}s,compute={a['compute']:.1f}s,"
+              f"store={a['store']:.1f}s,spans={t['n_spans']}")
     print("wrote BENCH_fleet.json")
 
 

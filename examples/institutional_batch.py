@@ -35,7 +35,8 @@ from benchmarks.fig2_workflows import (autoscaling_time, measure_service_time,
                                        parallel_time, serial_time)
 from benchmarks.fig3_autoscaling import run as fig3_run
 
-from repro.core import ConversionPipeline, RealScheduler
+from repro.core import ConversionPipeline, RealScheduler, tracing
+from repro.core.dashboard import build_report
 from repro.wsi import (ConvertOptions, SyntheticScanner, convert_wsi_to_dicom,
                        study_levels)
 
@@ -66,13 +67,16 @@ def run_real_batch(n: int, size: int, concurrency: int) -> None:
     # concurrency this PR adds (instance scale-out is what the paper-scale
     # simulation below demonstrates)
     sched = RealScheduler(workers=max(8, 4 * concurrency))
-    pipe = ConversionPipeline(
-        sched, convert=convert, max_instances=1, concurrency=concurrency,
-        cold_start=0.0, scale_down_delay=5.0, auto_export=True,
-    )
-    t0 = time.perf_counter()
-    pipe.run_batch(slides)
-    t_batch = time.perf_counter() - t0
+    with tracing.capture(now=sched.now) as tracer:
+        pipe = ConversionPipeline(
+            sched, convert=convert, max_instances=1,
+            concurrency=concurrency, cold_start=0.0, scale_down_delay=5.0,
+            auto_export=True,
+        )
+        t0 = time.perf_counter()
+        pipe.run_batch(slides)
+        t_batch = time.perf_counter() - t0
+        sched.run(until=30.0)  # store ingest + subscribers + export drain
 
     print(f"real event-driven batch: {n} × {size}² slides, "
           f"concurrency={concurrency}")
@@ -84,22 +88,37 @@ def run_real_batch(n: int, size: int, concurrency: int) -> None:
         n_dcm = sum(1 for k in study if k.endswith(".dcm"))
         print(f"  gs://dicom-store/{key}: {n_dcm} levels, "
               f"{len(pipe.dicom.get(key).data):,} bytes")
-    sched.run(until=30.0)  # store ingest + subscribers + auto-export drain
     studies = pipe.store_service.search_studies()
     print(f"  enterprise store: {len(studies)} studies, "
           f"{sum(pipe.store_service.study_summary(s)['n_instances'] for s in studies)} instances | "
           f"validated: {len(pipe.validator.checked)}, "
           f"ml-scored: {len(pipe.ml_subscriber.predictions)}")
-    c = pipe.metrics.counters
+    g = pipe.metrics.get
     print(f"  dicom2tiff export (auto, event-driven): "
-          f"requests={c['pipeline.export.requests']:g}, "
-          f"frames decoded={c['pipeline.export.frames_decoded']:g}, "
-          f"bytes written={c['pipeline.export.bytes_written']:,.0f}, "
-          f"dead-lettered={c.get('pipeline.export.dead_lettered', 0):g}")
+          f"requests={g('pipeline.export.requests'):g}, "
+          f"frames decoded={g('pipeline.export.frames_decoded'):g}, "
+          f"bytes written={g('pipeline.export.bytes_written'):,.0f}, "
+          f"dead-lettered={g('pipeline.export.dead_lettered'):g}")
     print(f"  gs://wsi-derived: {len(pipe.derived.list())} level TIFFs "
           f"across {len(studies)} studies")
     print(f"  cold starts: {pipe.service.cold_starts}, "
-          f"acks: {c['sub.wsi2dcm-push.acks']:g}\n")
+          f"acks: {g('sub.wsi2dcm-push.acks'):g}")
+    # the dashboard's per-slide critical path: where each slide's
+    # end-to-end time went (broker/queue vs conversion vs store I/O)
+    report = build_report(pipe.metrics, tracer, title="real batch")
+    lat = report["histograms"].get("sub.wsi2dcm-push.latency", {})
+    if lat:
+        print(f"  delivery latency: p50={lat['p50']:.2f}s "
+              f"p95={lat['p95']:.2f}s p99={lat['p99']:.2f}s")
+    for t in report["traces"]:
+        a, dur = t["attribution"], max(t["duration"], 1e-9)
+        print(f"  trace {t['slide']}: {t['duration']:.2f}s = "
+              f"queue {100 * a['queue'] / dur:.0f}% + "
+              f"compute {100 * a['compute'] / dur:.0f}% + "
+              f"store {100 * a['store'] / dur:.0f}% "
+              f"({t['n_spans']} spans, "
+              f"{'OK' if not t['problems'] else t['problems']})")
+    print()
     sched.shutdown()
 
 

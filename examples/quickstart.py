@@ -19,16 +19,19 @@ each level's dimensions/frame count/transfer syntax, a level-0 PSNR in
 the 30–40 dB range against the scanner's pixels, the enterprise store's
 QIDO view of the studies with the validation verdicts and the mock ML
 model's decoded per-frame pixel stats (fetched via indexed frame-level
-WADO), the exported level TIFFs, the pipeline's metric counters (note
+WADO), the exported level TIFFs, and finally the **single dashboard**:
+latency-histogram percentiles, each slide's end-to-end trace with its
+queue/compute/store critical-path split, and the metric counters (note
 ``pipeline.format.psv``/``pipeline.format.tiff`` and the
-``pipeline.export.*`` family), and a final "quickstart OK".
+``pipeline.export.*`` family) — then a final "quickstart OK".
 """
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import ConversionPipeline, RealScheduler
+from repro.core import ConversionPipeline, RealScheduler, tracing
+from repro.core.dashboard import build_report, render_text
 from repro.wsi import (PSVReader, SyntheticScanner, convert_wsi_to_dicom,
                        decode_tile, psnr, read_part10, study_levels)
 
@@ -43,6 +46,9 @@ def main():
 
     print("== pipeline: mixed landing bucket → pub/sub → sniffing converter ==")
     sched = RealScheduler(workers=2)
+    # arm the distributed tracer: every hop below lands in one span tree
+    # per slide, rendered by the dashboard at the end
+    tracer = tracing.arm(now=sched.now)
     pipe = ConversionPipeline(
         sched, convert=lambda data, meta: convert_wsi_to_dicom(data, meta),
         max_instances=2, cold_start=0.0, scale_down_delay=2.0,
@@ -99,9 +105,10 @@ def main():
               f"{type(rd).__name__} (level {rd.metadata['level']}) — "
               "reopens via the sniffer")
 
-    print("== metrics ==")
-    for k, v in sorted(pipe.metrics.counters.items()):
-        print(f"   {k} = {v:g}")
+    print("== the single dashboard: histograms, traces, counters ==")
+    tracing.disarm()
+    print(render_text(build_report(pipe.metrics, tracer,
+                                   title="quickstart")))
     sched.shutdown()
     print("quickstart OK")
 

@@ -29,9 +29,14 @@ direct-pallas        no ``pallas_call`` outside ``kernels/`` — every
                      kernel entry routes through ``ops._dispatch`` /
                      ``ops._batched_call`` (impl policy, bucketing,
                      mesh sharding live there exactly once)
-counter-name         first argument of ``metrics.inc``/``metrics.record``
-                     must be dotted ``segment.segment`` lowercase names
-                     (f-string placeholders allowed inside segments)
+counter-name         first argument of ``metrics.inc``/``metrics.record``/
+                     ``metrics.observe`` must be dotted
+                     ``segment.segment`` lowercase names (f-string
+                     placeholders allowed inside segments)
+span-name            names given to ``tracing.span``/``start_span`` and
+                     ``add_event`` follow the same dotted-lowercase
+                     contract as counters, so the dashboard's
+                     name-prefix attribution rules stay total
 jit-global-mutation  no mutation of module-level state inside a
                      ``jax.jit``-traced function — it runs at trace time
                      only and silently stops happening once cached
@@ -61,6 +66,8 @@ RULES = {
     "unseeded-random": "random/np.random use without an explicit seed",
     "direct-pallas": "pallas_call referenced outside kernels/",
     "counter-name": "metrics counter not in dotted segment.segment form",
+    "span-name": "tracing span/event name not in dotted segment.segment "
+                 "form",
     "jit-global-mutation": "module-level state mutated inside jax.jit",
 }
 
@@ -209,20 +216,35 @@ class _Linter(ast.NodeVisitor):
         # unseeded-random -------------------------------------------------
         self._check_random(node, name, tail)
 
-        # counter-name ----------------------------------------------------
-        if isinstance(node.func, ast.Attribute) \
-                and node.func.attr in ("inc", "record") and node.args:
-            text = _static_text(node.args[0])
-            if text is not None:
-                segs = text.split(".")
-                if len(segs) < 2 or not all(
-                        s and _COUNTER_SEG_RE.match(s) for s in segs):
-                    self._report(
-                        node, "counter-name",
-                        f"counter {text.replace(chr(0), '{…}')!r} must be "
-                        "dotted lowercase segment.segment form")
+        # counter-name / span-name: one dotted-lowercase naming contract --
+        if isinstance(node.func, ast.Attribute):
+            attr = node.func.attr
+            if attr in ("inc", "record", "observe") and node.args:
+                self._check_dotted(node, node.args[0], "counter-name",
+                                   "counter")
+            elif attr == "start_span" and node.args:
+                self._check_dotted(node, node.args[0], "span-name", "span")
+            elif attr == "span" and node.args \
+                    and name.endswith("tracing.span"):
+                self._check_dotted(node, node.args[0], "span-name", "span")
+            elif attr == "add_event" and len(node.args) >= 2:
+                self._check_dotted(node, node.args[1], "span-name",
+                                   "span event")
 
         self.generic_visit(node)
+
+    def _check_dotted(self, node: ast.Call, arg: ast.AST, rule: str,
+                      kind: str):
+        text = _static_text(arg)
+        if text is None:
+            return
+        segs = text.split(".")
+        if len(segs) < 2 or not all(
+                s and _COUNTER_SEG_RE.match(s) for s in segs):
+            self._report(
+                node, rule,
+                f"{kind} {text.replace(chr(0), '{…}')!r} must be "
+                "dotted lowercase segment.segment form")
 
     def _check_random(self, node: ast.Call, name: str, tail: str):
         if name in ("random.Random",) and not node.args:

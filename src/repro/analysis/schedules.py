@@ -32,6 +32,7 @@ import os
 from typing import Callable
 
 from repro.analysis import racedep
+from repro.core import tracing
 
 __all__ = ["explore", "replay", "ExplorationFailure", "ExplorationReport",
            "sim_fleet_scenario", "realbytes_fleet_scenario", "SCENARIOS"]
@@ -95,7 +96,7 @@ def _digest(result) -> str:
 
 
 def _dump_artifact(artifacts_dir: str, scenario: Callable, seed, sched,
-                   error: str) -> str:
+                   error: str, tracer=None) -> str:
     os.makedirs(artifacts_dir, exist_ok=True)
     name = scenario.__name__.replace("_", "-")
     path = os.path.join(artifacts_dir,
@@ -111,6 +112,9 @@ def _dump_artifact(artifacts_dir: str, scenario: Callable, seed, sched,
             "events_fired": len(trace),
             "replay": replay_cmd,
             "trace": [[seq, t, fn] for seq, t, fn in trace],
+            # the failing run's full span trees: which slide's journey
+            # wedged, and at which hop, without re-running anything
+            "spans": tracer.export() if tracer is not None else [],
         }, f, indent=1)
     print(f"schedule exploration FAILED (seed={seed}): {error}")
     print(f"artifact: {path}")
@@ -124,7 +128,7 @@ def _run_one(scenario: Callable, seed):
     from repro.core.clock import SimScheduler
 
     sched = SimScheduler(seed=seed, record_trace=True)
-    with racedep.capture() as det:
+    with racedep.capture() as det, tracing.capture(now=sched.now):
         result = scenario(sched)
     return result, sched, det
 
@@ -151,8 +155,12 @@ def explore(scenario: Callable, seeds: int = 20, *,
     accesses = 0
     for seed in seed_list:
         sched = SimScheduler(seed=seed, record_trace=True)
+        tracer = None
         try:
-            with racedep.capture() as det:
+            # traced on the sim clock: a failure artifact carries the span
+            # trees alongside the schedule trace
+            with racedep.capture() as det, \
+                    tracing.capture(now=sched.now) as tracer:
                 result = scenario(sched)
             accesses += det.accesses
             if det.violations:
@@ -168,7 +176,7 @@ def explore(scenario: Callable, seeds: int = 20, *,
                     f"!= reference {reference} (schedule-dependent bytes)")
         except Exception as e:  # noqa: BLE001 — every failure becomes a repro
             artifact = _dump_artifact(artifacts_dir, scenario, seed, sched,
-                                      f"{type(e).__name__}: {e}")
+                                      f"{type(e).__name__}: {e}", tracer)
             raise ExplorationFailure(
                 f"scenario {scenario.__name__!r} failed under seed {seed}: "
                 f"{e}", seed=seed, artifact=artifact) from e
@@ -245,7 +253,7 @@ def _fleet_run(sched, slides: dict, meta: dict, convert,
     assert len(out_keys) == len(slides), \
         f"{len(out_keys)} studies for {len(slides)} slides"
     if check_writes:
-        writes = int(pipe.metrics.counters["bucket.dicom-store.writes"])
+        writes = int(pipe.metrics.get("bucket.dicom-store.writes"))
         assert writes == len(slides), \
             f"{writes} writes for {len(slides)} slides (double convert?)"
     return {k: pipe.dicom.get(derive_out_key(k)).data for k in slides}

@@ -5,7 +5,14 @@ at-least-once push delivery (ack deadlines, retries, DLQ, hedging), a
 Cloud-Run-style autoscaling worker service (0→N→0, cold starts, concurrency),
 and the Figure-1 conversion pipeline wiring — all runnable deterministically
 under a discrete-event scheduler or on real threads.
+
+Observability rides the same spine: :mod:`repro.core.tracing` threads one
+span tree per slide through every pub/sub, fleet, conversion, and store
+hop (disarmed by default, one global read per instrumentation point);
+:mod:`repro.core.metrics` adds log-bucketed latency histograms; and
+:mod:`repro.core.dashboard` folds both into the single report.
 """
+from repro.core import dashboard, tracing  # noqa: F401
 from repro.core.autoscaler import AutoscalingService  # noqa: F401
 from repro.core.clock import RealScheduler, SimScheduler  # noqa: F401
 from repro.core.fleet import ConverterFleet  # noqa: F401

@@ -38,6 +38,7 @@ from collections import deque
 from typing import Callable
 
 from repro.analysis.lockdep import TrackedLock, check_callback
+from repro.core import tracing
 from repro.core.metrics import Metrics
 
 __all__ = ["AutoscalingService", "Instance"]
@@ -51,6 +52,11 @@ class _Request:
     done: Callable[[bool], None]
     arrived: float
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
+    # trace handoff across scheduler hops: the request span (admission →
+    # completion) and the per-serve handler span; thread-local ambience
+    # cannot cross the event loop, so requests carry their spans explicitly
+    span: object = None
+    hspan: object = None
 
 
 class Instance:
@@ -186,6 +192,10 @@ class AutoscalingService:
     # ---- request path --------------------------------------------------------
     def receive(self, payload, done: Callable[[bool], None]):
         req = _Request(payload, done, self.scheduler.now())
+        # parented on the ambient delivery span (receive runs inside the
+        # push endpoint)
+        req.span = tracing.start_span(f"svc.{self.name}.request",
+                                      req_id=req.req_id)
         self.metrics.inc(f"svc.{self.name}.requests")
         with self._lock:
             self.queue.append(req)
@@ -232,9 +242,13 @@ class AutoscalingService:
         # service.
         inst.active += 1
         inst.state = "busy"
-        self.metrics.record(
-            f"svc.{self.name}.queue_wait", self.scheduler.now() - req.arrived
-        )
+        wait = self.scheduler.now() - req.arrived
+        # per-request hot path: histogram, not an unbounded series
+        self.metrics.observe(f"svc.{self.name}.queue_wait", wait)
+        tracing.add_event(req.span, "svc.serve", instance=inst.iid,
+                          queue_wait=wait)
+        req.hspan = tracing.start_span(f"svc.{self.name}.handle",
+                                       parent=req.span, instance=inst.iid)
         if self.real_work:
             # pool thread: up to `concurrency` of these run in parallel
             self.scheduler.schedule(0.0, self._run_real, inst, req)
@@ -255,7 +269,10 @@ class AutoscalingService:
         # sim-mode service-time model is the one sanctioned exception)
         check_callback(f"svc.{self.name}.handler")
         try:
-            self.handler(req.payload)
+            # handler runs with the serve span ambient, so conversion-stage
+            # spans nest under svc.<name>.handle
+            with tracing.use_span(req.hspan):
+                self.handler(req.payload)
             ok = True
         except Exception:
             ok = False
@@ -271,9 +288,14 @@ class AutoscalingService:
                 inst.idle_since = self.scheduler.now()
                 self._schedule_scale_down(inst)
             self.metrics.inc(f"svc.{self.name}.completed")
-            self.metrics.record(
-                f"svc.{self.name}.latency", self.scheduler.now() - req.arrived
-            )
+            latency = self.scheduler.now() - req.arrived
+            # dual-recorded: the series carries completion *timestamps*
+            # (Figure 2/3 read them), the histogram the p50/p95/p99
+            self.metrics.record(f"svc.{self.name}.latency", latency)
+            self.metrics.observe(f"svc.{self.name}.latency", latency)
+        status = "ok" if ok else "error"
+        tracing.end_span(req.hspan, status=status)
+        tracing.end_span(req.span, status=status)
         # ack/nack outside the lock: it may re-enter receive() via the
         # subscription's redelivery pump
         check_callback(f"svc.{self.name}.done")

@@ -46,6 +46,7 @@ from typing import Callable
 
 from repro.analysis.lockdep import check_callback
 from repro.analysis.racedep import tracked_state
+from repro.core import tracing
 from repro.core.autoscaler import AutoscalingService, Instance, _req_ids
 
 __all__ = ["ConverterFleet", "FleetInstance"]
@@ -76,6 +77,10 @@ class _FleetRequest:
     arrived: float
     dones: list = dataclasses.field(default_factory=list)
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
+    # explicit trace handoff (see autoscaler._Request): the request span
+    # survives steals and kill-requeues; hspan is the current serve attempt
+    span: object = None
+    hspan: object = None
 
     def done(self, ok):
         # every delivery that attached to this request (original + deduped
@@ -149,22 +154,33 @@ class ConverterFleet(AutoscalingService):
                 # redelivery/duplicate of finished work: the study is
                 # already durably stored (idempotent writes), just ack
                 self.metrics.inc(f"svc.{self.name}.duplicates")
+                # annotate the *delivery* span (ambient): this attempt
+                # resolved against already-finished work
+                tracing.add_event(None, "fleet.duplicate", outcome="done")
                 verdict = "done"
             elif key is not None and key in self._admitted:
                 # duplicate of in-flight work: ride the existing request
-                self._admitted[key].dones.append(done)
+                primary = self._admitted[key]
+                primary.dones.append(done)
                 self.metrics.inc(f"svc.{self.name}.duplicates")
+                tracing.add_event(None, "fleet.duplicate",
+                                  outcome="attached", req_id=primary.req_id)
                 return
             else:
                 reason = self._shed_reason(tenant)
                 if reason is not None:
                     self.metrics.log("shed", svc=self.name, tenant=tenant,
                                      reason=reason)
+                    tracing.add_event(None, "fleet.shed", tenant=tenant,
+                                      reason=reason)
                     verdict = "shed"
             if verdict is None:
                 req = _FleetRequest(payload=payload, tenant=tenant, key=key,
                                     arrived=self.scheduler.now(),
                                     dones=[done])
+                req.span = tracing.start_span(
+                    f"svc.{self.name}.request",
+                    req_id=req.req_id, tenant=tenant)
                 self._admit(req)
                 self._drain()
                 self._kick_controller()
@@ -277,7 +293,10 @@ class ConverterFleet(AutoscalingService):
             if not free or not donors:
                 return
             donor = max(donors, key=lambda i: (len(i.queue), -i.iid))
-            self._serve(free[0], donor.queue.popleft())
+            stolen = donor.queue.popleft()
+            tracing.add_event(stolen.span, "fleet.steal",
+                              src=donor.iid, dst=free[0].iid)
+            self._serve(free[0], stolen)
 
     def _serve(self, inst: FleetInstance, req: _FleetRequest):
         inst.running.append(req)
@@ -348,6 +367,11 @@ class ConverterFleet(AutoscalingService):
         inst.queue.clear()
         super()._kill(inst)
         for req in reversed(orphans):
+            # the serve attempt dies with the instance; the request span
+            # stays open and ends when the requeued run completes
+            tracing.end_span(req.hspan, status="killed")
+            tracing.add_event(req.span, "fleet.kill_requeue",
+                              instance=inst.iid)
             if req.tenant not in self._pending:
                 self._pending[req.tenant] = deque()
                 self._rr.append(req.tenant)

@@ -42,7 +42,7 @@ from typing import Callable
 
 from repro.analysis.lockdep import TrackedLock
 from repro.analysis.racedep import tracked_state
-from repro.core import clock
+from repro.core import clock, tracing
 from repro.core.autoscaler import AutoscalingService
 from repro.core.fleet import ConverterFleet
 from repro.core.metrics import Metrics
@@ -331,18 +331,23 @@ class ConversionPipeline:
         from repro.wsi.formats import sniff
 
         try:
-            obj = self.landing.get(event["name"])
-            fmt = sniff(obj.data)
+            with tracing.span("pipeline.fetch", key=event["name"]):
+                obj = self.landing.get(event["name"])
+                fmt = sniff(obj.data)
             self.metrics.inc(f"pipeline.format.{fmt}")
             meta = dict(obj.metadata)
             meta.setdefault("format", fmt)
-            dcm_bytes = self.convert(obj.data, meta)
+            with tracing.span("pipeline.convert", key=event["name"],
+                              format=fmt):
+                dcm_bytes = self.convert(obj.data, meta)
         except Exception as exc:
             with self._converted_lock:
                 self._errors[event["name"]] = \
                     f"{type(exc).__name__}: {exc}"
             raise
-        out_key = self._store_study(event["name"], obj.generation, dcm_bytes)
+        with tracing.span("pipeline.store", key=event["name"]):
+            out_key = self._store_study(event["name"], obj.generation,
+                                        dcm_bytes)
         with self._batch_cond:
             self._errors.pop(event["name"], None)
             self.converted.append(out_key)

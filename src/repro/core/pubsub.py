@@ -45,6 +45,7 @@ from typing import Callable
 
 from repro.analysis.lockdep import TrackedLock, check_callback
 from repro.analysis.racedep import tracked_state
+from repro.core import tracing
 from repro.core.metrics import Metrics
 
 __all__ = ["Message", "Topic", "Subscription", "DeliveryCtx",
@@ -77,6 +78,20 @@ class Topic:
         msg = Message(data=data, attributes=attributes or {},
                       ordering_key=ordering_key,
                       publish_time=self.scheduler.now())
+        if tracing.current() is not None:
+            # parent priority: the publishing handler's ambient span, else
+            # trace context already on the attributes (a DLQ republish
+            # carries the original message's context), else this publish
+            # ROOTS a new trace — the landing bucket's ambient-less
+            # OBJECT_FINALIZE publish is where a slide's trace begins
+            sp = tracing.start_span(
+                f"topic.{self.name}.publish",
+                parent=tracing.current_span(),
+                parent_ctx=tracing.extract(msg.attributes),
+                message_id=msg.message_id,
+                object=(data or {}).get("name"))
+            tracing.inject(msg.attributes, sp)
+            tracing.end_span(sp)
         self.metrics.inc(f"topic.{self.name}.published")
         self.metrics.log("publish", topic=self.name, id=msg.message_id)
         for sub in self.subscriptions:
@@ -208,6 +223,7 @@ class DeliveryCtx:
         self.done = False
         self.deadline_handle = None
         self.hedge_handle = None
+        self.span = None  # delivery-attempt span (None when disarmed)
 
     def ack(self):
         if not self.sub._settle(self):
@@ -318,6 +334,12 @@ class Subscription:
                 self._release_key(msg.ordering_key)
             return
         ctx = DeliveryCtx(self, msg, attempt)
+        # every delivery attempt (retries included) gets its own span,
+        # parented on the publish span riding the message attributes
+        ctx.span = tracing.start_span(
+            f"sub.{self.name}.deliver",
+            parent_ctx=tracing.extract(msg.attributes),
+            attempt=attempt, message_id=msg.message_id)
         self.outstanding[msg.message_id] = ctx
         self.metrics.inc(f"sub.{self.name}.deliveries")
         ctx.deadline_handle = self.scheduler.schedule(
@@ -335,20 +357,26 @@ class Subscription:
                 # so the ack deadline expires and redelivers — exactly the
                 # lost-HTTP-push failure mode the paper's retries cover
                 self.metrics.inc(f"sub.{self.name}.fault_dropped")
+                tracing.add_event(ctx.span, "fault.drop", attempt=attempt)
                 return
             if delay:
                 self.metrics.inc(f"sub.{self.name}.fault_delayed")
+                tracing.add_event(ctx.span, "fault.delay", by=delay)
             if dup_lag is not None:
                 # same ctx pushed twice: first settlement wins, consumers
                 # must dedupe (idempotent store / fleet admission)
                 self.metrics.inc(f"sub.{self.name}.fault_duplicated")
+                tracing.add_event(ctx.span, "fault.duplicate", lag=dup_lag)
                 self.scheduler.schedule(delay + dup_lag, self._push, ctx)
         self.scheduler.schedule(delay, self._push, ctx)
 
     def _push(self, ctx: DeliveryCtx):
         check_callback(f"sub.{self.name}.endpoint")
         try:
-            self.endpoint(ctx.msg, ctx)
+            # the delivery span is ambient while the endpoint runs, so
+            # service admission / conversion / store spans parent under it
+            with tracing.use_span(ctx.span):
+                self.endpoint(ctx.msg, ctx)
         except Exception as e:  # endpoint crashed synchronously
             ctx.nack(f"exception: {e}")
 
@@ -387,10 +415,13 @@ class Subscription:
         with self._lock:
             self.acked.add(ctx.msg.message_id)
         self.metrics.inc(f"sub.{self.name}.acks")
-        self.metrics.record(
+        # publish→ack latency is per-delivery hot-path telemetry: fold it
+        # into the bounded histogram instead of an unbounded series
+        self.metrics.observe(
             f"sub.{self.name}.latency",
             self.scheduler.now() - ctx.msg.publish_time,
         )
+        tracing.end_span(ctx.span, status="acked")
         self._cleanup(ctx)
 
     def _will_retry(self, ctx: DeliveryCtx) -> bool:
@@ -406,12 +437,15 @@ class Subscription:
             self.metrics.inc(f"sub.{self.name}.requeues")
             self.metrics.log("requeue", sub=self.name,
                              id=ctx.msg.message_id, reason=reason)
+            tracing.add_event(ctx.span, "sub.requeue", reason=reason)
+            tracing.end_span(ctx.span, status="requeued")
             self._cleanup(ctx, release_key=False)
             held = ctx.msg.ordering_key is not None
             self.scheduler.schedule(
                 self.min_backoff,
                 lambda: self._enqueue(ctx.msg, ctx.attempt, holds_key=held))
             return
+        tracing.end_span(ctx.span, status="nacked", reason=reason)
         # a retried ordered message keeps its key reserved through the
         # backoff; only a dead-letter hands the key to the next message
         self._cleanup(ctx, release_key=not self._will_retry(ctx))
@@ -421,6 +455,7 @@ class Subscription:
         if not self._settle(ctx):
             return
         self.metrics.inc(f"sub.{self.name}.deadline_expired")
+        tracing.end_span(ctx.span, status="deadline")
         self._cleanup(ctx, release_key=not self._will_retry(ctx))
         self._retry(ctx, "ack deadline expired")
 
@@ -433,11 +468,20 @@ class Subscription:
         # duplicate delivery outside the outstanding map (original still owns
         # it); hedge_of routes the duplicate's settlement (see DeliveryCtx)
         dup = DeliveryCtx(self, ctx.msg, ctx.attempt, hedge_of=ctx)
+        # the hedge's span links back to the primary attempt (`hedge_of`)
+        # and parents on the same publish span, so both race legs land in
+        # one tree
+        dup.span = tracing.start_span(
+            f"sub.{self.name}.hedge",
+            parent_ctx=tracing.extract(ctx.msg.attributes),
+            attempt=ctx.attempt,
+            hedge_of=ctx.span.span_id if ctx.span is not None else None)
         self.scheduler.schedule(0.0, self._push, dup)
 
     def _on_hedge_ack(self, dup: DeliveryCtx):
         """The duplicate finished first: settle the original delivery."""
         self.metrics.inc(f"sub.{self.name}.hedge_acks")
+        tracing.end_span(dup.span, status="acked")
         dup.hedge_of.ack()  # no-op if the original already settled
 
     def _on_hedge_nack(self, dup: DeliveryCtx, reason: str):
@@ -446,12 +490,14 @@ class Subscription:
         self.metrics.inc(f"sub.{self.name}.hedge_nacks")
         self.metrics.log("hedge_nack", sub=self.name,
                          id=dup.msg.message_id, reason=reason)
+        tracing.end_span(dup.span, status="nacked", reason=reason)
 
     def _retry(self, ctx: DeliveryCtx, reason: str):
         if not self._will_retry(ctx):
             self.metrics.inc(f"sub.{self.name}.dead_lettered")
             self.metrics.log("dead_letter", sub=self.name,
                              id=ctx.msg.message_id, reason=reason)
+            tracing.add_event(ctx.span, "sub.dead_letter", reason=reason)
             if self.dlq is not None:
                 self.dlq.publish(ctx.msg.data,
                                  {**ctx.msg.attributes, "dlq_reason": reason})
@@ -460,6 +506,8 @@ class Subscription:
                       self.max_backoff)
         self.metrics.log("retry", sub=self.name, id=ctx.msg.message_id,
                          attempt=ctx.attempt, backoff=backoff, reason=reason)
+        tracing.add_event(ctx.span, "sub.retry", attempt=ctx.attempt,
+                          backoff=backoff, reason=reason)
         held = ctx.msg.ordering_key is not None
         self.scheduler.schedule(
             backoff,

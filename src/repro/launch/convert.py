@@ -42,7 +42,7 @@ def main(argv=None) -> int:
     ok = pipe.done_count() == args.slides
     print(f"{pipe.done_count()}/{args.slides} converted in {dt:.1f}s; "
           f"DICOM store: {pipe.dicom.list()}")
-    for k, v in sorted(pipe.metrics.counters.items()):
+    for k, v in sorted(pipe.metrics.summary()["counters"].items()):
         print(f"  {k} = {v:g}")
     sched.shutdown()
     return 0 if ok else 1

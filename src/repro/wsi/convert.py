@@ -70,6 +70,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import tracing
 from repro.kernels import downsample2x2, jpeg_transform, ops as kernel_ops
 from repro.wsi.dicom import (TS_EXPLICIT_LE, TS_JPEG_BASELINE, new_uid,
                              write_part10)
@@ -321,9 +322,13 @@ def _convert_pipelined(rd: SlideReader, metadata: dict | None,
     if not needed:
         return n_levels
 
-    dev = _upload_level0(rd)
+    with tracing.span("convert.upload"):
+        dev = _upload_level0(rd)
     donate = jax.default_backend() != "cpu"
-    outs = _pyramid_chain(n_levels, needed, tile, donate, opt.mesh)(dev)
+    with tracing.span("convert.dispatch", levels=len(needed)):
+        # async dispatch: the span covers trace/launch, not device time —
+        # device work overlaps the per-level entropy spans below
+        outs = _pyramid_chain(n_levels, needed, tile, donate, opt.mesh)(dev)
     TRANSFER_STATS.dispatches += 1
     del dev  # donated / retired: the chain owns the pixel pyramid now
     for coef in outs:
@@ -332,16 +337,19 @@ def _convert_pipelined(rd: SlideReader, metadata: dict | None,
 
     for li, coef_dev in zip(needed, outs):
         H, W = dims[li]
-        coef = np.asarray(coef_dev)
-        TRANSFER_STATS.fetches += 1
-        bh, bw = H // tile, W // tile
-        chunks = [coef] if (bh == 0 or bw == 0) \
-            else _level_chunks(coef, bh, bw)
-        frames: list[bytes] = []
-        for ch in chunks:
-            frames += encode_coef_batch(np.asarray(ch))
-        _wrap_level(opt, li, frames, TS_JPEG_BASELINE, tile, H, W,
-                    metadata, study_uid, series_uid)
+        with tracing.span("convert.entropy", level=li):
+            coef = np.asarray(coef_dev)
+            TRANSFER_STATS.fetches += 1
+            bh, bw = H // tile, W // tile
+            chunks = [coef] if (bh == 0 or bw == 0) \
+                else _level_chunks(coef, bh, bw)
+            frames: list[bytes] = []
+            for ch in chunks:
+                frames += encode_coef_batch(np.asarray(ch))
+            _wrap_level(opt, li, frames, TS_JPEG_BASELINE, tile, H, W,
+                        metadata, study_uid, series_uid)
+            tracing.add_event(None, "convert.checkpoint", level=li,
+                              frames=len(frames))
     return n_levels
 
 
@@ -435,14 +443,29 @@ def convert_wsi_to_dicom(slide_bytes: bytes, metadata: dict | None = None,
     study_uid, series_uid = _study_uids(opt)
     ctx = kernel_ops.use_mesh(opt.mesh) if opt.mesh is not None \
         else nullcontext()
-    with ctx:
-        if opt.pipelined and opt.batched and opt.jpeg:
-            n_levels = _convert_pipelined(rd, metadata, opt, study_uid,
-                                          series_uid)
-        else:
-            n_levels = _convert_sync(rd, metadata, opt, study_uid,
-                                     series_uid)
-    return _pack_study(opt, n_levels, study_uid, rd.tile)
+    stats0 = (TRANSFER_STATS.uploads, TRANSFER_STATS.dispatches,
+              TRANSFER_STATS.fetches)
+    with tracing.span("convert.slide",
+                      slide=(metadata or {}).get("slide_id")) as sp:
+        with ctx:
+            if opt.pipelined and opt.batched and opt.jpeg:
+                n_levels = _convert_pipelined(rd, metadata, opt, study_uid,
+                                              series_uid)
+            else:
+                n_levels = _convert_sync(rd, metadata, opt, study_uid,
+                                         series_uid)
+        with tracing.span("convert.pack", levels=n_levels):
+            out = _pack_study(opt, n_levels, study_uid, rd.tile)
+        if sp is not None:
+            # TRANSFER_STATS is advisory (not thread-synced): under
+            # concurrent conversions the deltas may include a neighbour's
+            # transfers — they annotate, they don't assert
+            sp.attrs.update(
+                levels=n_levels,
+                uploads=TRANSFER_STATS.uploads - stats0[0],
+                dispatches=TRANSFER_STATS.dispatches - stats0[1],
+                fetches=TRANSFER_STATS.fetches - stats0[2])
+    return out
 
 
 def study_levels(study_tar: bytes) -> dict[str, bytes]:

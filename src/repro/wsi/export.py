@@ -44,6 +44,7 @@ from __future__ import annotations
 from contextlib import nullcontext
 
 from repro.analysis.lockdep import TrackedLock
+from repro.core import tracing
 from repro.core.pubsub import DeliveryCtx, Message, Subscription, Topic
 from repro.core.storage import Bucket
 from repro.kernels import ops as kernel_ops
@@ -117,18 +118,20 @@ class ExportService:
         rather than assume it).
         """
         self.metrics.inc("pipeline.export.requests")
-        metas = self.store.search_instances(study_uid)
-        if not metas:
-            raise KeyError(f"unknown study {study_uid}")
-        keys = []
-        ctx = kernel_ops.use_mesh(self.mesh) if self.mesh is not None \
-            else nullcontext()
-        with ctx:
-            for li, meta in enumerate(metas):
-                key = self._export_level(study_uid, li, meta,
-                                         skip_unchanged)
-                if key is not None:
-                    keys.append(key)
+        with tracing.span("export.study", study=study_uid):
+            metas = self.store.search_instances(study_uid)
+            if not metas:
+                raise KeyError(f"unknown study {study_uid}")
+            keys = []
+            ctx = kernel_ops.use_mesh(self.mesh) if self.mesh is not None \
+                else nullcontext()
+            with ctx:
+                for li, meta in enumerate(metas):
+                    key = self._export_level(study_uid, li, meta,
+                                             skip_unchanged)
+                    if key is not None:
+                        keys.append(key)
+                        tracing.add_event(None, "export.level", key=key)
         with self._lock:
             self.exported.append((study_uid, tuple(keys)))
         return keys

@@ -33,6 +33,7 @@ from collections import OrderedDict
 
 from repro.analysis.lockdep import TrackedLock
 from repro.analysis.racedep import tracked_state
+from repro.core import tracing
 from repro.core.pubsub import Topic
 from repro.core.storage import Bucket
 from repro.wsi.convert import study_levels
@@ -68,12 +69,14 @@ class DicomStoreService:
     # ---- STOW ---------------------------------------------------------------
     def store_study_archive(self, key: str, archive: bytes) -> list[str]:
         """Ingest a converted study tar (one .dcm per pyramid level)."""
-        stored = []
-        for name, blob in study_levels(archive).items():
-            if not name.endswith(".dcm"):
-                continue
-            stored.append(self.store_instance(blob, source=f"{key}/{name}"))
-        self.checkpoint()
+        with tracing.span("stow.archive", key=key):
+            stored = []
+            for name, blob in study_levels(archive).items():
+                if not name.endswith(".dcm"):
+                    continue
+                stored.append(
+                    self.store_instance(blob, source=f"{key}/{name}"))
+            self.checkpoint()
         return stored
 
     def store_instance(self, part10: bytes, *, source: str | None = None,
@@ -116,6 +119,8 @@ class DicomStoreService:
             self.metrics.inc("dicomstore.instances")
         else:
             self.metrics.inc("dicomstore.replaced")
+        tracing.add_event(None, "stow.instance", sop=sop,
+                          replaced=prev is not None)
         if prev is None or prev["generation"] != obj.generation:
             self.topic.publish(dict(meta))
         return sop
@@ -406,21 +411,23 @@ class ShardedDicomStore:
                                                     _index=idx)
 
     def store_study_archive(self, key: str, archive: bytes) -> list[str]:
-        stored, touched = [], set()
-        for name, blob in study_levels(archive).items():
-            if not name.endswith(".dcm"):
-                continue
-            idx = Part10Index(blob)
-            study = idx.get_str(0x0020, 0x000D)
-            if not study:
-                raise ValueError(
-                    "corrupt Part-10 stream: instance without SOP/study UID")
-            si = self.shard_index_for(study)
-            stored.append(self.shards[si].store_instance(
-                blob, source=f"{key}/{name}", _index=idx))
-            touched.add(si)
-        for si in sorted(touched):
-            self.shards[si].checkpoint()
+        with tracing.span("stow.archive", key=key, shards=self.n_shards):
+            stored, touched = [], set()
+            for name, blob in study_levels(archive).items():
+                if not name.endswith(".dcm"):
+                    continue
+                idx = Part10Index(blob)
+                study = idx.get_str(0x0020, 0x000D)
+                if not study:
+                    raise ValueError(
+                        "corrupt Part-10 stream: instance without "
+                        "SOP/study UID")
+                si = self.shard_index_for(study)
+                stored.append(self.shards[si].store_instance(
+                    blob, source=f"{key}/{name}", _index=idx))
+                touched.add(si)
+            for si in sorted(touched):
+                self.shards[si].checkpoint()
         return stored
 
     def delete_instance(self, sop_instance_uid: str) -> dict:

@@ -24,6 +24,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.analysis.lockdep import TrackedLock
+from repro.core import tracing
 from repro.core.pubsub import DeliveryCtx, Message, Subscription
 from repro.core.storage import Bucket
 from repro.wsi.dicom import Part10Index
@@ -61,6 +62,10 @@ class ValidationService:
             with self._lock:
                 self.checked.append(sop)
             self.metrics.inc("validation.passed")
+            # per-instance verify outcome as a structured span event on the
+            # ambient delivery span (quarantines annotate in _quarantine)
+            tracing.add_event(None, "validate.instance", sop=sop,
+                              verdict="passed")
         ctx.ack()
 
     def _quarantine(self, sop: str, blob: bytes, reason: str):
@@ -73,6 +78,8 @@ class ValidationService:
         with self._lock:
             self.quarantined.append((sop, reason))
         self.metrics.inc("validation.quarantined")
+        tracing.add_event(None, "validate.instance", sop=sop,
+                          verdict="quarantined", reason=reason)
 
     def sweep(self) -> int:
         """Re-validate every indexed instance (bit-rot patrol, cron-style).
@@ -145,4 +152,5 @@ class InferenceSubscriber:
         self.metrics.inc("inference.frames", n)
         self.metrics.inc("inference.pixels",
                          int(np.prod(pixels.shape[:3])) if n else 0)
+        tracing.add_event(None, "inference.instance", sop=sop, frames=n)
         ctx.ack()

@@ -87,14 +87,14 @@ def test_repeated_and_post_rebuild_exports_are_byte_identical():
     # must be deterministic (content-addressed no-op, no re-notify)
     exporter.export_study(study, skip_unchanged=False)
     assert _derived_bytes(exporter.derived) == clean
-    assert store.metrics.counters["bucket.derived.idempotent_skips"] >= 2
+    assert store.metrics.get("bucket.derived.idempotent_skips") >= 2
 
     # default path short-circuits on the recorded content generation —
     # no WADO fetch, no decode (frames_decoded unchanged)
-    before = svc.metrics.counters["pipeline.export.frames_decoded"]
+    before = svc.metrics.get("pipeline.export.frames_decoded")
     keys = exporter.export_study(study)
-    assert svc.metrics.counters["pipeline.export.levels_unchanged"] == 2
-    assert svc.metrics.counters["pipeline.export.frames_decoded"] == before
+    assert svc.metrics.get("pipeline.export.levels_unchanged") == 2
+    assert svc.metrics.get("pipeline.export.frames_decoded") == before
     assert keys == sorted(clean)  # skipped levels still report their keys
 
     # simulated crash: fresh service over the same bucket + rebuilt index
@@ -114,7 +114,7 @@ def test_sub_tile_levels_are_skipped_not_fatal():
     keys = exporter.export_study(study)
     assert [k.rsplit("/", 1)[1] for k in keys] == \
         ["level_0.tiff", "level_1.tiff"]  # level_2 (128² < tile) skipped
-    assert svc.metrics.counters["pipeline.export.levels_skipped"] == 1
+    assert svc.metrics.get("pipeline.export.levels_skipped") == 1
 
 
 def test_unknown_study_raises_key_error():
@@ -141,11 +141,11 @@ def test_request_export_through_pipeline_topic():
     sched.run()
     assert pipe.derived.list() == [f"{study}/level_0.tiff",
                                    f"{study}/level_1.tiff"]
-    c = pipe.metrics.counters
-    assert c["pipeline.export.requests"] == 1
-    assert c["pipeline.export.frames_decoded"] == 5  # 4 + 1 frames
-    assert c["pipeline.export.bytes_written"] > 0
-    assert c["topic.export-request.published"] == 1
+    g = pipe.metrics.get
+    assert g("pipeline.export.requests") == 1
+    assert g("pipeline.export.frames_decoded") == 5  # 4 + 1 frames
+    assert g("pipeline.export.bytes_written") > 0
+    assert g("topic.export-request.published") == 1
 
 
 def test_auto_export_triggers_on_instance_stored():
@@ -160,9 +160,9 @@ def test_auto_export_triggers_on_instance_stored():
     # the recorded content generation instead of re-decoding every level
     assert pipe.derived.list() == [f"{study}/level_0.tiff",
                                    f"{study}/level_1.tiff"]
-    assert pipe.metrics.counters["pipeline.export.requests"] == 2
-    assert pipe.metrics.counters["pipeline.export.frames_decoded"] == 5
-    assert pipe.metrics.counters["pipeline.export.levels_unchanged"] == 2
+    assert pipe.metrics.get("pipeline.export.requests") == 2
+    assert pipe.metrics.get("pipeline.export.frames_decoded") == 5
+    assert pipe.metrics.get("pipeline.export.levels_unchanged") == 2
 
 
 def test_corrupt_frame_dead_letters_with_actionable_reason():
@@ -183,7 +183,7 @@ def test_corrupt_frame_dead_letters_with_actionable_reason():
     pipe.request_export("1.2.9")
     sched.run()
     assert pipe.derived.list() == []
-    assert pipe.metrics.counters["pipeline.export.dead_lettered"] == 1
+    assert pipe.metrics.get("pipeline.export.dead_lettered") == 1
     ((event, reason),) = pipe.export_dead_lettered
     assert event == {"study_uid": "1.2.9"}
     assert "corrupt JPEG" in reason
@@ -211,7 +211,7 @@ def test_full_circle_export_reingests_through_sniffing_pipeline():
     # pipeline as any scanner upload and lands as a new study
     tif = pipe.derived.get(keys[0]).data
     out = pipe.run_batch({"slides/rescan.tiff": tif}, timeout=240.0)
-    assert pipe.metrics.counters["pipeline.format.tiff"] >= 1
+    assert pipe.metrics.get("pipeline.format.tiff") >= 1
     levels = study_levels(out["slides/rescan.tiff"])
     assert sorted(k for k in levels if k.endswith(".dcm")) == \
         ["level_0.dcm", "level_1.dcm"]

@@ -114,7 +114,7 @@ def test_duplicate_delivery_dedupes_in_flight_and_completed():
     svc.receive({"name": "s"}, done.append, key=("s", "g1"))
     assert done == [True, True, True]
     assert runs == ["s"]
-    assert svc.metrics.counters["svc.conv.duplicates"] == 2
+    assert svc.metrics.get("svc.conv.duplicates") == 2
 
 
 def test_kill_mid_conversion_requeues_victims_work_exactly_once():
@@ -128,8 +128,8 @@ def test_kill_mid_conversion_requeues_victims_work_exactly_once():
     sched.schedule(10.0, svc.kill_instance)
     sched.run()
     assert done == [True, True, True]
-    assert svc.metrics.counters["svc.conv.requeued"] == 3
-    assert svc.metrics.counters["svc.conv.completed"] == 3
+    assert svc.metrics.get("svc.conv.requeued") == 3
+    assert svc.metrics.get("svc.conv.completed") == 3
     assert svc.instance_count() == 0  # scaled back down afterwards
 
 

@@ -30,11 +30,11 @@ def test_kill_mid_conversion_requeues_once_releases_key_no_dlq():
     # requeued exactly once inside the fleet — the broker never saw a
     # failure, so there is no retry, no DLQ entry, and the ack settled
     # the delivery on the re-run
-    assert pipe.metrics.counters["svc.wsi2dcm.requeued"] == 1
-    assert pipe.metrics.counters["svc.wsi2dcm.killed"] == 1
+    assert pipe.metrics.get("svc.wsi2dcm.requeued") == 1
+    assert pipe.metrics.get("svc.wsi2dcm.killed") == 1
     assert pipe.dead_lettered == []
-    assert pipe.metrics.counters["sub.wsi2dcm-push.acks"] == 1
-    assert pipe.metrics.counters.get("sub.wsi2dcm-push.nacks", 0) == 0
+    assert pipe.metrics.get("sub.wsi2dcm-push.acks") == 1
+    assert pipe.metrics.get("sub.wsi2dcm-push.nacks") == 0
     # ordered key released on ack: a later event for the same object is
     # deliverable (nothing parked, nothing busy)
     assert pipe.subscription._ordered_busy == set()
@@ -50,7 +50,7 @@ def test_kill_during_cold_start_loses_nothing():
         pipe.ingest(f"scans/s{i}.psv", bytes([i + 1]) * 8)
     sched.schedule(5.0, pipe.service.kill_instance)  # still starting
     sched.run()
-    assert pipe.metrics.counters["sub.wsi2dcm-push.acks"] == 4
+    assert pipe.metrics.get("sub.wsi2dcm-push.acks") == 4
     assert pipe.dead_lettered == []
 
 
@@ -74,8 +74,8 @@ def test_scripted_faults_zero_lost_zero_double():
     # zero lost: every slide converted and settled; zero double: the
     # duplicated and late deliveries deduped at fleet admission
     assert sorted(runs) == [f"scans/s{i}.psv" for i in range(4)]
-    assert pipe.metrics.counters["sub.wsi2dcm-push.acks"] == 4
-    assert pipe.metrics.counters["svc.wsi2dcm.duplicates"] >= 1
+    assert pipe.metrics.get("sub.wsi2dcm-push.acks") == 4
+    assert pipe.metrics.get("svc.wsi2dcm.duplicates") >= 1
     assert pipe.dead_lettered == []
     assert pipe.subscription.stats()["outstanding"] == 0
 
@@ -93,7 +93,7 @@ def test_seeded_random_faults_converge():
         for i in range(n):
             pipe.ingest(f"scans/s{i:02d}.psv", bytes([i + 1]) * 8)
         sched.run()
-        assert pipe.metrics.counters["sub.wsi2dcm-push.acks"] == n
+        assert pipe.metrics.get("sub.wsi2dcm-push.acks") == n
         assert pipe.dead_lettered == []
         assert pipe.subscription.stats()["outstanding"] == 0
         assert pipe.subscription.stats()["backlog"] == 0
@@ -110,15 +110,15 @@ def test_backpressure_sheds_without_dead_lettering():
     for i in range(n):
         pipe.ingest(f"burst/s{i:02d}.psv", bytes([i + 1]) * 8)
     sched.run()
-    shed = pipe.metrics.counters["svc.wsi2dcm.shed"]
+    shed = pipe.metrics.get("svc.wsi2dcm.shed")
     assert shed > 0, "overload never shed"
     # sheds came back as budget-exempt requeues (same attempt number), so
     # even with a 3-attempt budget nothing dead-letters and all complete
-    assert pipe.metrics.counters["sub.wsi2dcm-push.requeues"] >= shed
+    assert pipe.metrics.get("sub.wsi2dcm-push.requeues") >= shed
     assert pipe.dead_lettered == []
-    assert pipe.metrics.counters["sub.wsi2dcm-push.acks"] == n
+    assert pipe.metrics.get("sub.wsi2dcm-push.acks") == n
     # in-flight work is never shed: admitted requests all completed
-    assert pipe.metrics.counters["svc.wsi2dcm.completed"] == n
+    assert pipe.metrics.get("svc.wsi2dcm.completed") == n
 
 
 def test_dlq_depth_shedding_holds_new_work_back():
@@ -145,9 +145,55 @@ def test_dlq_depth_shedding_holds_new_work_back():
     pipe.ingest("ok/q.psv", b"qq")
     sched.schedule(12.0, lambda: setattr(pipe.service, "shed_dlq_depth", 10))
     sched.run()
-    assert pipe.metrics.counters["svc.wsi2dcm.shed"] >= 2
-    assert pipe.metrics.counters["sub.wsi2dcm-push.acks"] == 1
+    assert pipe.metrics.get("svc.wsi2dcm.shed") >= 2
+    assert pipe.metrics.get("sub.wsi2dcm-push.acks") == 1
     assert [e["name"] for e, _ in pipe.dead_lettered] == ["bad/p.psv"]
+
+
+# ------------------------------------------------- faults as span events
+def test_fault_and_kill_span_events():
+    """Every injected broker fault and the instance kill show up as
+    structured span events in the delivery/request spans (PR 10): chaos is
+    visible in the same trace tree the dashboard renders, not only as
+    counters."""
+    from repro.core import tracing
+
+    faults = (DeliveryFaults()
+              .drop("s0", attempts=(1,))
+              .duplicate("s1", lag=1.0)
+              .delay("s2", by=200.0))
+    sched = SimScheduler()
+    with tracing.capture(now=sched.now) as tracer:
+        pipe = ConversionPipeline(
+            sched, service_time=40.0, cold_start=5.0, max_instances=2,
+            ack_deadline=120.0, min_backoff=5.0, subscribers=False,
+            fleet={}, ordered_ingest=True, delivery_faults=faults)
+        for i in range(3):
+            pipe.ingest(f"scans/s{i}.psv", bytes([i + 1]) * 8)
+        sched.schedule(20.0, pipe.service.kill_instance)  # mid-conversion
+        sched.run()
+    assert pipe.metrics.get("sub.wsi2dcm-push.acks") == 3
+    assert pipe.metrics.get("svc.wsi2dcm.killed") >= 1
+
+    events = {}  # event name -> list of (span name, attrs)
+    for sp in tracer.spans:
+        for _, name, attrs in sp.events:
+            events.setdefault(name, []).append((sp.name, attrs))
+    # each scripted fault annotated the delivery attempt it hit
+    assert events["fault.drop"] == [("sub.wsi2dcm-push.deliver",
+                                     {"attempt": 1})]
+    assert events["fault.delay"] == [("sub.wsi2dcm-push.deliver",
+                                      {"by": 200.0})]
+    assert events["fault.duplicate"] == [("sub.wsi2dcm-push.deliver",
+                                          {"lag": 1.0})]
+    # the kill requeued its victims on their open request spans...
+    assert {n for n, _ in events["fleet.kill_requeue"]} == \
+        {"svc.wsi2dcm.request"}
+    assert all(a["instance"] >= 0 for _, a in events["fleet.kill_requeue"])
+    # ...and the dead serve attempts settled as killed handle spans
+    killed = [sp for sp in tracer.spans if sp.status == "killed"]
+    assert killed and {sp.name for sp in killed} == {"svc.wsi2dcm.handle"}
+    assert len(killed) == len(events["fleet.kill_requeue"])
 
 
 # ---------------------------------------------------- real-bytes gauntlet
@@ -201,12 +247,12 @@ def test_gauntlet_zero_lost_zero_double_converted(gauntlet):
     pipe, slides, _, faults = gauntlet
     assert pipe.dead_lettered == []
     assert sum(faults.injected.values()) == 3
-    assert pipe.metrics.counters["svc.wsi2dcm.killed"] == 1
+    assert pipe.metrics.get("svc.wsi2dcm.killed") == 1
     assert len(pipe.dicom.list()) == len(slides)
     # one study-tar write per slide: a re-converted duplicate would either
     # bump writes (different bytes) or idempotent_skips (same bytes) — the
     # former must not happen at all
-    assert pipe.metrics.counters["bucket.dicom-store.writes"] == len(slides)
+    assert pipe.metrics.get("bucket.dicom-store.writes") == len(slides)
 
 
 def test_gauntlet_study_tars_byte_identical_to_serial(gauntlet):

@@ -228,8 +228,8 @@ def test_mixed_format_batch_through_event_driven_pipeline():
     sched.shutdown()
     assert outs["psv/slide.psv"] == outs["tiff/slide.tiff"]
     assert outs["svs/extra.svs"] != outs["psv/slide.psv"]
-    assert pipe.metrics.counters["pipeline.format.psv"] == 1
-    assert pipe.metrics.counters["pipeline.format.tiff"] == 2
+    assert pipe.metrics.get("pipeline.format.psv") == 1
+    assert pipe.metrics.get("pipeline.format.tiff") == 2
 
 
 def test_garbage_landing_object_dead_letters_with_actionable_reason():

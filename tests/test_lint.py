@@ -88,6 +88,30 @@ def test_counter_name_fires(tmp_path):
     assert _rules(fs) == ["counter-name"] * 3
 
 
+def test_counter_name_covers_observe(tmp_path):
+    fs = _findings(tmp_path, """\
+        metrics.observe("Bad Histogram", 1.0)
+        metrics.observe("sub.push.latency", 1.0)   # compliant: fine
+    """)
+    assert _rules(fs) == ["counter-name"]
+
+
+def test_span_name_fires(tmp_path):
+    fs = _findings(tmp_path, """\
+        from repro.core import tracing
+        sp = tracing.start_span("FlatName")
+        with tracing.span("Bad Span.x"):
+            pass
+        tracing.add_event(sp, "noDots")
+        sp2 = tracing.start_span("sub.push.deliver")       # compliant
+        tracing.add_event(sp2, f"fault.{kind}")            # placeholder
+        with tracing.span("convert.slide"):                # compliant
+            pass
+    """)
+    assert _rules(fs) == ["span-name"] * 3
+    assert "segment.segment" in fs[0].message
+
+
 def test_jit_global_mutation_fires(tmp_path):
     fs = _findings(tmp_path, """\
         import jax

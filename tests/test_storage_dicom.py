@@ -42,7 +42,7 @@ def test_identical_content_write_is_idempotent():
     bucket.put("x", b"different")
     sched.run()
     assert len(got) == 2  # second identical write did not re-notify
-    assert store.metrics.counters["bucket.b.idempotent_skips"] == 1
+    assert store.metrics.get("bucket.b.idempotent_skips") == 1
 
 
 def test_lifecycle_tiers_by_age():

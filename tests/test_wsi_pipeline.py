@@ -199,4 +199,4 @@ def test_redelivered_conversion_is_effectively_once():
     sched.run()
     # redelivery happened and the slide was eventually converted exactly once
     assert pipe.done_count() == 1
-    assert pipe.metrics.counters["sub.wsi2dcm-push.deadline_expired"] >= 1
+    assert pipe.metrics.get("sub.wsi2dcm-push.deadline_expired") >= 1
